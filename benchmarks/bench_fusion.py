@@ -1,0 +1,79 @@
+"""Guidelines §5 (beyond-paper optimizations), measured:
+
+  (b) subgraph-level FP+NA fusion, BOTH algebraic orders:
+      aggregate-raw-then-project (linearity) vs project-then-aggregate.
+      MEASURED OUTCOME (see EXPERIMENTS.md §Perf, hypothesis H-F1): the
+      aggregate-first order LOSES badly whenever raw_dim >> hidden (every
+      HGNN dataset here) because the K-neighbor gather re-reads raw rows
+      per edge (E x F bytes) instead of d-dim projected rows (E x d).
+      The TPU-correct fusion is project-then-aggregate with the projected
+      tile resident in VMEM — which is exactly kernels/segment_spmm.py.
+      The guideline's fusion only pays off when F < d (never for raw
+      features); ops-level dispatch picks the cheap order by byte model.
+  (-) concat-free Semantic Aggregation — stacked [P,N,D] layout vs explicit
+      list-stack (the DR-Type CatArrayBatchedCopy analogue): a clean win.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_jitted
+from repro.core import metapath as mp, semantics, stages
+from repro.core.characterize import analyze_hlo_text
+from repro.data.synthetic import make_imdb
+from repro.kernels import ref as kref
+
+
+def run() -> list:
+    rows: list = []
+    hg = make_imdb()
+    sub = mp.build_padded(hg, ["M", "D", "M"], max_degree=32)
+    x = jnp.asarray(hg.features["M"])  # [N, 3066] raw
+    n, f = x.shape
+    d = 64
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((f, d)).astype(np.float32) / np.sqrt(f))
+    nbr = jnp.asarray(sub.nbr)
+    mask = jnp.asarray(sub.mask)
+
+    # baseline: FP for every node, then aggregate projected vectors
+    base = jax.jit(lambda x, w: kref.segment_spmm(x @ w, nbr, mask, mean=True))
+    # fused (guideline b): aggregate raw, project the aggregate
+    fused = jax.jit(lambda x, w: kref.fused_fp_na(x, w, nbr, mask, mean=True))
+
+    out_b, out_f = base(x, w), fused(x, w)
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(out_f),
+                               rtol=2e-3, atol=2e-3)
+
+    t_b = time_jitted(base, x, w)
+    t_f = time_jitted(fused, x, w)
+    rep_b = analyze_hlo_text(base.lower(x, w).compile().as_text())
+    rep_f = analyze_hlo_text(fused.lower(x, w).compile().as_text())
+    rows.append(("guideline_b/fp_na_baseline", t_b,
+                 f"bytes={rep_b['total_hbm_bytes']:.3g} flops={rep_b['total_flops']:.3g}"))
+    rows.append(("guideline_b/fp_na_fused", t_f,
+                 f"bytes={rep_f['total_hbm_bytes']:.3g} flops={rep_f['total_flops']:.3g} "
+                 f"speedup={t_b / max(t_f, 1e-9):.2f}x"))
+
+    # concat-free SA
+    p = semantics.init_semantic_attention(jax.random.key(0), d, 128)
+    z_list = [jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+              for _ in range(4)]
+    z_stacked = jnp.stack(z_list)
+    sa_list = jax.jit(lambda *zs: semantics.semantic_attention_list(p, list(zs)))
+    sa_stack = jax.jit(lambda z: semantics.semantic_attention(p, z))
+    t_l = time_jitted(sa_list, *z_list)
+    t_s = time_jitted(sa_stack, z_stacked)
+    rep_l = analyze_hlo_text(sa_list.lower(*z_list).compile().as_text())
+    dr = rep_l["hbm_bytes_by_class"].get("DR", 0.0)
+    rows.append(("guideline_dr/sa_with_concat", t_l,
+                 f"DR_bytes={dr:.3g}"))
+    rows.append(("guideline_dr/sa_concat_free", t_s,
+                 f"speedup={t_l / max(t_s, 1e-9):.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

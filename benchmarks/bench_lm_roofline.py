@@ -1,0 +1,35 @@
+"""The 40-cell LM roofline table (brief deliverable g): reads the dry-run
+JSONs produced by repro.launch.dryrun and emits one CSV row per cell.
+Derived column: the three terms + bound + mfu proxy."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def run() -> list:
+    rows: list = []
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        rows.append(("lm_roofline/missing", 0.0,
+                     f"run_python_-m_repro.launch.dryrun_first ({RESULTS})"))
+        return rows
+    for path in files:
+        r = json.load(open(path))
+        rl = r["roofline"]
+        name = f"lm_roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        rows.append((name, rl["step_time_s"] * 1e6,
+                     f"bound={rl['bound']} comp={rl['compute_s']:.3f}s "
+                     f"mem={rl['memory_s']:.3f}s coll={rl['collective_s']:.3f}s "
+                     f"mfu={rl['mfu_proxy']:.4f} "
+                     f"peak_gib={r['memory']['peak_device_gib']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,29 @@
+"""Shared benchmark helpers: wall-clock timing of jitted callables + CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def time_jitted(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time (us) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,45 @@
+"""Benchmark driver: one module per paper table/figure + the LM roofline.
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py contract)."""
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_stage_breakdown",     # Fig. 2
+    "bench_kernel_types",        # Fig. 3
+    "bench_kernel_roofline",     # Fig. 4 + Table 3
+    "bench_neighbor_scaling",    # Fig. 5a
+    "bench_metapath_scaling",    # Fig. 5b
+    "bench_subgraph_parallelism",  # Fig. 5c
+    "bench_sparsity_vs_length",  # Fig. 6a + guideline (c)
+    "bench_total_vs_metapaths",  # Fig. 6b
+    "bench_fusion",              # guidelines §5 before/after
+    "bench_lm_roofline",         # 40-cell arch x shape roofline table
+]
+
+
+def main() -> None:
+    import importlib
+
+    only = sys.argv[1:] or None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            from benchmarks.common import emit
+
+            emit(mod.run())
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED\n{traceback.format_exc()}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Reproduce the paper's characterization for any HGNN workload:
+
+    PYTHONPATH=src python examples/characterize_hgnn.py --model han --dataset acm
+
+Prints the Fig. 2 stage breakdown (measured wall time), the Fig. 3
+kernel-class mix, and the Fig. 4 roofline placement per stage.
+"""
+import argparse
+
+import jax
+
+from benchmarks.hgnn_setup import build, stage_fns
+from benchmarks.common import time_jitted
+from repro.core.characterize import HBM_BW, PEAK_FLOPS, analyze_hlo_text
+
+RIDGE = PEAK_FLOPS / HBM_BW
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="han",
+                    choices=["han", "rgcn", "magnn"])
+    ap.add_argument("--dataset", default="acm",
+                    choices=["imdb", "acm", "dblp"])
+    ap.add_argument("--fused", action="store_true",
+                    help="optimized path (stacked subgraphs, concat-free SA)")
+    args = ap.parse_args()
+
+    cfg, m, params, batch = build(args.model, args.dataset, fused=args.fused)
+    fns = stage_fns(m, params, batch)
+
+    print(f"== {args.model} on {args.dataset} "
+          f"({'optimized' if args.fused else 'baseline'} path) ==")
+    times = {}
+    for stage in ("FP", "NA", "SA"):
+        fn, fargs = fns[stage]
+        times[stage] = time_jitted(fn, *fargs)
+    total = sum(times.values())
+    print("\nFig.2 stage breakdown (CPU wall):")
+    for stage, t in times.items():
+        print(f"  {stage}: {t/1e3:9.2f} ms  ({100*t/total:4.1f}%)")
+
+    print("\nFig.3 kernel classes / Fig.4 roofline per stage (TPU v5e model):")
+    for stage in ("FP", "NA", "SA"):
+        fn, fargs = fns[stage]
+        rep = analyze_hlo_text(fn.lower(*fargs).compile().as_text())
+        fl, by = rep["total_flops"], max(rep["total_hbm_bytes"], 1.0)
+        ai = fl / by
+        mix = " ".join(f"{c}={int(100*v/max(rep['total_hbm_bytes'],1))}%"
+                       for c, v in sorted(rep["hbm_bytes_by_class"].items()))
+        print(f"  {stage}: AI={ai:6.2f} FLOP/B "
+              f"[{'compute' if ai > RIDGE else 'memory'}-bound]  bytes: {mix}")
+
+
+if __name__ == "__main__":
+    main()

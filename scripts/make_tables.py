@@ -1,0 +1,22 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from results/dryrun."""
+import glob, json, sys
+
+def table(mesh):
+    rows = []
+    for p in sorted(glob.glob("results/dryrun/*.json")):
+        r = json.load(open(p))
+        if r["mesh"] != mesh:
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | {rl['bound']} | "
+            f"{rl['useful_flops_ratio']:.3f} | {rl['mfu_proxy']:.4f} | "
+            f"{r['memory']['peak_device_gib']:.2f} |")
+    return rows
+
+for mesh in ("16x16", "2x16x16"):
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | bound | useful | mfu_proxy | peak GiB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    print("\n".join(table(mesh)))

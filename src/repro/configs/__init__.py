@@ -1,0 +1,11 @@
+from repro.configs.base import (  # noqa: F401
+    HGNNConfig,
+    LONG_CONTEXT_ARCHS,
+    ModelConfig,
+    MoEConfig,
+    SHAPES,
+    ShapeConfig,
+    SSMConfig,
+    long_context_supported,
+)
+from repro.configs.registry import get_config, get_reduced, list_archs  # noqa: F401

@@ -1,0 +1,109 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns the exact abstract inputs the step
+function takes (no device allocation); ``input_shardings`` returns the
+matching NamedSharding pytree.  Both follow the kind:
+
+  train   -> {tokens, labels [, extra_embeds | frames]}
+  prefill -> {tokens [, extra_embeds | frames]}
+  decode  -> {token, pos, caches}   (KV/SSM caches are step INPUTS: serving)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import BATCH, MODEL, resolve_spec
+from repro.nn.ssm import MambaCache
+from repro.nn.transformer import init_kv_caches, layer_runs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.dtype
+    if shape.kind == "train":
+        out: Dict[str, Any] = {
+            "tokens": _sds((b, s), "int32"),
+            "labels": _sds((b, s), "int32"),
+        }
+        if cfg.family == "vlm":
+            out["extra_embeds"] = _sds((b, cfg.n_frontend_embeds, cfg.d_model), dt)
+        if cfg.family == "encdec":
+            out["frames"] = _sds((b, s, cfg.d_model), dt)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((b, s), "int32")}
+        if cfg.family == "vlm":
+            out["extra_embeds"] = _sds((b, cfg.n_frontend_embeds, cfg.d_model), dt)
+        if cfg.family == "encdec":
+            out["frames"] = _sds((b, s, cfg.d_model), dt)
+        return out
+    # decode: one new token against an s-long cache
+    if cfg.family == "encdec":
+        from repro.nn.encdec import init_encdec_caches
+
+        caches = jax.eval_shape(lambda: init_encdec_caches(cfg, b, s, s))
+    else:
+        caches = jax.eval_shape(lambda: init_kv_caches(cfg, b, s))
+    return {
+        "token": _sds((b, 1), "int32"),
+        "pos": _sds((), "int32"),
+        "caches": caches,
+    }
+
+
+def _ns(mesh, shape, axes):
+    return NamedSharding(mesh, resolve_spec(shape, axes, mesh))
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, caches) -> Any:
+    """Shardings matching the cache pytree (list per run | encdec dict)."""
+    seq = MODEL if cfg.decode_kv_shard_seq else None
+    kvh = None if cfg.decode_kv_shard_seq else MODEL
+
+    if isinstance(caches, dict):  # encdec: stacked [L,B,S,KVH,Dh] buffers
+        return {
+            k: _ns(mesh, v.shape, (None, BATCH, seq, kvh, None))
+            for k, v in caches.items()
+        }
+    out = []
+    for (kind, count), c in zip(layer_runs(cfg), caches):
+        if isinstance(c, MambaCache):
+            out.append(MambaCache(
+                state=_ns(mesh, c.state.shape, (None, BATCH, MODEL, None, None)),
+                conv_x=_ns(mesh, c.conv_x.shape, (None, BATCH, None, MODEL)),
+                conv_B=_ns(mesh, c.conv_B.shape, (None, BATCH, None, None)),
+                conv_C=_ns(mesh, c.conv_C.shape, (None, BATCH, None, None)),
+            ))
+        else:
+            out.append({
+                k: _ns(mesh, c[k].shape, (None, BATCH, seq, kvh, None))
+                for k in ("k", "v")
+            })
+    return out
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
+    specs = input_specs(cfg, shape)
+    out: Dict[str, Any] = {}
+    for name, sds in specs.items():
+        if name in ("tokens", "labels", "token"):
+            out[name] = _ns(mesh, sds.shape, (BATCH, None))
+        elif name in ("extra_embeds", "frames"):
+            out[name] = _ns(mesh, sds.shape, (BATCH, None, None))
+        elif name == "pos":
+            out[name] = NamedSharding(mesh, P())
+        elif name == "caches":
+            out[name] = cache_shardings(cfg, mesh, sds)
+        else:
+            raise KeyError(name)
+    return out

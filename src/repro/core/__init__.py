@@ -1,0 +1,2 @@
+from repro.core.hgraph import HeteroGraph, metapath_adjacency, sparsity  # noqa: F401
+from repro.core import metapath, semantics, stages  # noqa: F401

@@ -1,0 +1,18 @@
+"""HGNN model zoo: the paper's three HGNNs (RGCN, HAN, MAGNN) + the GCN
+comparison baseline. Each module exposes a ``Model`` class with:
+
+  * ``prepare(hg)``       host-side Subgraph Build -> device batch (stage 1)
+  * ``init(rng, batch)``  parameter pytree
+  * ``fp / na / sa / head`` per-stage pure functions (for stage benchmarks)
+  * ``forward``           full inference = head(sa(na(fp(...))))
+"""
+from repro.core.models.han import HAN
+from repro.core.models.rgcn import RGCN
+from repro.core.models.magnn import MAGNN
+from repro.core.models.gcn import GCN
+
+from repro.configs.base import HGNNConfig
+
+
+def get_model(cfg: HGNNConfig):
+    return {"han": HAN, "rgcn": RGCN, "magnn": MAGNN, "gcn": GCN}[cfg.model](cfg)

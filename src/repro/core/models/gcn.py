@@ -1,0 +1,73 @@
+"""GCN (Kipf & Welling) — the paper's GNN comparison baseline (§4.5, Fig. 5a).
+
+Two stages only: Aggregation (normalized mean over neighbors) + Combination
+(dense matmul). Used on the Reddit-like graph to contrast with HAN's
+metapath-scaled Neighbor Aggregation.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HGNNConfig
+from repro.core import metapath as mp
+from repro.core import stages
+from repro.core.hgraph import HeteroGraph
+from repro.data.synthetic import DATASET_TARGET
+
+
+class GCN:
+    def __init__(self, cfg: HGNNConfig):
+        self.cfg = cfg
+        self.target = DATASET_TARGET[cfg.dataset]
+
+    def prepare(self, hg: HeteroGraph) -> Dict:
+        t = self.target
+        csr = mp.build_csr(hg, [t, t])
+        seg, idx = stages.csr_to_edges(csr.indptr, csr.indices)
+        return {
+            "x": jnp.asarray(hg.features[t]),
+            "seg": jnp.asarray(seg),
+            "idx": jnp.asarray(idx),
+            "n_nodes": hg.node_counts[t],
+            "feat_dim": hg.feat_dim(t),
+        }
+
+    def init(self, rng: jax.Array, batch: Dict) -> Dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        d_in, d = batch["feat_dim"], cfg.hidden
+        return {
+            "w1": jax.random.normal(k1, (d_in, d), jnp.float32) / np.sqrt(d_in),
+            "w2": jax.random.normal(k2, (d, cfg.n_classes), jnp.float32) / np.sqrt(d),
+        }
+
+    # Aggregation stage (paper's GNN "Aggregation")
+    def aggregate(self, batch: Dict, x: jax.Array, seg=None, idx=None) -> jax.Array:
+        seg = batch["seg"] if seg is None else seg
+        idx = batch["idx"] if idx is None else idx
+        return stages.mean_aggregate_csr(x, seg, idx, batch["n_nodes"])
+
+    # Combination stage
+    def combine(self, w: jax.Array, h: jax.Array) -> jax.Array:
+        return jax.nn.relu(h @ w)
+
+    def forward(self, params: Dict, batch: Dict) -> jax.Array:
+        h = self.combine(params["w1"], self.aggregate(batch, batch["x"]))
+        return self.aggregate(batch, h) @ params["w2"]
+
+    # stage protocol used by benchmarks (maps onto FP/NA/SA loosely)
+    def fp(self, params, batch):
+        return batch["x"] @ params["w1"]
+
+    def na(self, params, batch, h):
+        return jax.nn.relu(self.aggregate(batch, h))
+
+    def sa(self, params, batch, z):
+        return z  # GCN has no semantic aggregation — single semantic
+
+    def head(self, params, z):
+        return z @ params["w2"]

@@ -1,0 +1,175 @@
+"""The paper's HGNN execution stages as composable JAX modules.
+
+Stage 2 — Feature Projection (FP):   type-specific dense matmul (DM-Type).
+Stage 3 — Neighbor Aggregation (NA): graph-topology gather + reduce (TB-Type)
+                                     with element-wise attention math (EW-Type).
+Stage 4 — Semantic Aggregation (SA): lives in :mod:`repro.core.semantics`.
+
+Two NA execution paths:
+
+* ``*_csr``  — DGL-faithful baseline: flat gather + ``segment_sum`` /
+  ``segment_max`` over edge lists.  Lowers to gather/scatter HLO — the
+  TB-Type irregular pattern the paper profiles (SpMMCsr / SDDMMCoo).
+* ``*_padded`` — TPU-adapted optimized path: degree-capped dense ``[N, K]``
+  neighbor tiles; the reduction tree becomes a masked dense reduction that
+  feeds the MXU/VPU and tiles into VMEM (see kernels/segment_spmm.py for the
+  Pallas version).
+
+All functions are pure and jit-able; parameters are plain dict pytrees.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Stage 2: Feature Projection
+# ---------------------------------------------------------------------------
+
+
+def init_feature_projection(
+    rng: jax.Array, feat_dims: Dict[str, int], hidden: int
+) -> Dict[str, jax.Array]:
+    keys = jax.random.split(rng, len(feat_dims))
+    return {
+        t: jax.random.normal(k, (d, hidden), jnp.float32) / np.sqrt(d)
+        for k, (t, d) in zip(keys, sorted(feat_dims.items()))
+    }
+
+
+def feature_projection(
+    params: Dict[str, jax.Array], feats: Dict[str, jax.Array]
+) -> Dict[str, jax.Array]:
+    """Project per-type raw features into the shared latent space (DM-Type)."""
+    return {t: feats[t] @ params[t] for t in feats}
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: Neighbor Aggregation
+# ---------------------------------------------------------------------------
+
+
+def init_gat(rng: jax.Array, n_heads: int, head_dim: int) -> Dict[str, jax.Array]:
+    k1, k2 = jax.random.split(rng)
+    s = 1.0 / np.sqrt(head_dim)
+    return {
+        "a_dst": jax.random.normal(k1, (n_heads, head_dim), jnp.float32) * s,
+        "a_src": jax.random.normal(k2, (n_heads, head_dim), jnp.float32) * s,
+    }
+
+
+def _leaky_relu(x, slope=0.2):
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def gat_aggregate_padded(
+    p: Dict[str, jax.Array],
+    h_dst: jax.Array,  # [N, H, Dh] projected features of target nodes
+    h_src: jax.Array,  # [M, H, Dh] projected features of neighbor pool
+    nbr: jax.Array,  # [N, K] int32
+    mask: jax.Array,  # [N, K] float
+) -> jax.Array:
+    """GAT neighbor aggregation over a padded subgraph. Returns [N, H, Dh]."""
+    e_dst = (h_dst * p["a_dst"]).sum(-1)  # [N, H]   EW
+    e_src_all = (h_src * p["a_src"]).sum(-1)  # [M, H]   EW
+    hn = h_src[nbr]  # [N, K, H, Dh]  TB gather
+    e = _leaky_relu(e_dst[:, None, :] + e_src_all[nbr])  # [N, K, H]
+    e = jnp.where(mask[..., None] > 0, e, -1e9)
+    e = e - jax.lax.stop_gradient(e.max(axis=1, keepdims=True))
+    w = jnp.exp(e) * mask[..., None]
+    alpha = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)  # [N, K, H]
+    out = jnp.einsum("nkh,nkhd->nhd", alpha, hn)  # reduction tree
+    return out
+
+
+def gat_aggregate_csr(
+    p: Dict[str, jax.Array],
+    h_dst: jax.Array,  # [N, H, Dh]
+    h_src: jax.Array,  # [M, H, Dh]
+    seg: jax.Array,  # [E] int32 destination (segment) id per edge
+    idx: jax.Array,  # [E] int32 source id per edge
+    n_nodes: int,
+) -> jax.Array:
+    """DGL-faithful GAT: SDDMM (edge scores) + segment-softmax + SpMM."""
+    e_dst = (h_dst * p["a_dst"]).sum(-1)  # [N, H]
+    e_src = (h_src * p["a_src"]).sum(-1)  # [M, H]
+    e = _leaky_relu(e_dst[seg] + e_src[idx])  # [E, H]  SDDMM-like
+    m = jax.ops.segment_max(e, seg, num_segments=n_nodes)  # scatter-max
+    w = jnp.exp(e - jax.lax.stop_gradient(m[seg]))
+    denom = jax.ops.segment_sum(w, seg, num_segments=n_nodes)
+    alpha = w / jnp.maximum(denom[seg], 1e-9)  # [E, H]
+    msg = h_src[idx] * alpha[..., None]  # [E, H, Dh]
+    return jax.ops.segment_sum(msg, seg, num_segments=n_nodes)  # SpMM
+
+
+def mean_aggregate_padded(h_src: jax.Array, nbr: jax.Array, mask: jax.Array) -> jax.Array:
+    """Mean NA (RGCN). h_src [M, D] -> [N, D]."""
+    hn = h_src[nbr]  # [N, K, D]
+    s = (hn * mask[..., None]).sum(axis=1)
+    d = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    return s / d
+
+
+def mean_aggregate_csr(
+    h_src: jax.Array, seg: jax.Array, idx: jax.Array, n_nodes: int
+) -> jax.Array:
+    s = jax.ops.segment_sum(h_src[idx], seg, num_segments=n_nodes)
+    d = jax.ops.segment_sum(jnp.ones_like(seg, h_src.dtype), seg, num_segments=n_nodes)
+    return s / jnp.maximum(d[:, None], 1.0)
+
+
+def csr_to_edges(indptr: np.ndarray, indices: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side: CSR -> (segment_ids, indices) flat edge list."""
+    degrees = np.diff(indptr)
+    seg = np.repeat(np.arange(len(degrees), dtype=np.int32), degrees)
+    return seg, indices.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Instance aggregation (MAGNN intra-metapath)
+# ---------------------------------------------------------------------------
+
+
+def init_instance_attention(rng: jax.Array, n_heads: int, head_dim: int):
+    return init_gat(rng, n_heads, head_dim)
+
+
+def rotate_encoder(h_path: jax.Array) -> jax.Array:
+    """MAGNN's relational rotation (RotatE-style) instance encoder.
+
+    ``h_path``: [N, I, L, H, Dh] projected features along each instance.
+    Treats feature pairs as complex numbers and composes positions by
+    rotation, then averages. Falls back to mean when L == 1.
+    """
+    n, i, l, h, dh = h_path.shape
+    re, im = h_path[..., 0::2], h_path[..., 1::2]
+    # cumulative rotation along the path
+    acc_re, acc_im = re[:, :, 0], im[:, :, 0]
+    out_re, out_im = acc_re, acc_im
+    for pos in range(1, l):
+        r, s = re[:, :, pos], im[:, :, pos]
+        acc_re, acc_im = acc_re * r - acc_im * s, acc_re * s + acc_im * r
+        out_re = out_re + acc_re
+        out_im = out_im + acc_im
+    out = jnp.stack([out_re / l, out_im / l], axis=-1).reshape(n, i, h, dh)
+    return out
+
+
+def instance_aggregate(
+    p: Dict[str, jax.Array],
+    h_tgt: jax.Array,  # [N, H, Dh]
+    enc: jax.Array,  # [N, I, H, Dh] encoded instances
+    mask: jax.Array,  # [N, I]
+) -> jax.Array:
+    """Attention over metapath instances per target node -> [N, H, Dh]."""
+    e_t = (h_tgt * p["a_dst"]).sum(-1)  # [N, H]
+    e_i = (enc * p["a_src"]).sum(-1)  # [N, I, H]
+    e = _leaky_relu(e_t[:, None, :] + e_i)
+    e = jnp.where(mask[..., None] > 0, e, -1e9)
+    e = e - jax.lax.stop_gradient(e.max(axis=1, keepdims=True))
+    w = jnp.exp(e) * mask[..., None]
+    alpha = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+    return jnp.einsum("nih,nihd->nhd", alpha, enc)

@@ -1,0 +1,9 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_acm,
+    make_dblp,
+    make_dataset,
+    make_imdb,
+    make_reddit_like,
+    DATASET_METAPATHS,
+    DATASET_TARGET,
+)

@@ -1,0 +1,100 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy:
+  * On TPU (``use_pallas=True`` in configs) the Pallas kernels run compiled.
+  * On CPU (this container, and the multi-pod dry-run) Pallas TPU custom
+    calls cannot compile, so wrappers either run ``interpret=True`` (tests)
+    or fall back to the pure-jnp reference (dry-run lowering), which is what
+    the roofline analysis reads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (
+    decode_attention as _dec,
+    flash_attention as _fa,
+    fused_fp_na as _ffn,
+    ref,
+    segment_spmm as _spmm,
+    semantic_attn as _sem,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("mean", "use_pallas", "interpret"))
+def segment_spmm(h_src, nbr, mask, mean: bool = True, use_pallas: bool = False,
+                 interpret: bool = False):
+    if use_pallas and (_on_tpu() or interpret):
+        return _spmm.segment_spmm(h_src, nbr, mask, mean=mean, interpret=interpret)
+    return ref.segment_spmm(h_src, nbr, mask, mean=mean)
+
+
+@functools.partial(jax.jit, static_argnames=("mean", "use_pallas", "interpret"))
+def fused_fp_na(x_src, w, nbr, mask, mean: bool = True, use_pallas: bool = False,
+                interpret: bool = False):
+    if use_pallas and (_on_tpu() or interpret):
+        return _ffn.fused_fp_na(x_src, w, nbr, mask, mean=mean, interpret=interpret)
+    return ref.fused_fp_na(x_src, w, nbr, mask, mean=mean)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def semantic_attention(z, w, b, q, use_pallas: bool = False, interpret: bool = False):
+    if use_pallas and (_on_tpu() or interpret):
+        return _sem.semantic_attention(z, w, b, q, interpret=interpret)
+    return ref.semantic_attention(z, w, b, q)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "use_pallas", "interpret")
+)
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    use_pallas: bool = False, interpret: bool = False):
+    if use_pallas and (_on_tpu() or interpret):
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   interpret=interpret)
+    return ref.mha_attention(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def decode_attention(q, k, v, kv_len, use_pallas: bool = False,
+                     interpret: bool = False):
+    if use_pallas and (_on_tpu() or interpret):
+        return _dec.decode_attention(q, k, v, kv_len, interpret=interpret)
+    return ref.decode_attention(q, k, v, kv_len)
+
+
+def gat_aggregate(p: Dict, h_dst, h_src, nbr, mask, use_pallas: bool = False,
+                  interpret: bool = False):
+    """GAT NA with the Pallas segment kernel on the weighted-gather hot loop.
+
+    Attention weights (EW-Type math) are computed in XLA; the gather+reduce
+    (TB-Type, the paper's dominant cost) runs in the kernel by folding the
+    per-edge weight into the mask: sum_k alpha_k * h[nbr_k] ==
+    segment_spmm(h, nbr, mask=alpha, mean=False).
+    """
+    e_dst = (h_dst * p["a_dst"]).sum(-1)  # [N, H]
+    e_src = (h_src * p["a_src"]).sum(-1)  # [M, H]
+    e = e_dst[:, None, :] + e_src[nbr]  # [N, K, H]
+    e = jnp.where(e >= 0, e, 0.2 * e)
+    e = jnp.where(mask[..., None] > 0, e, -1e9)
+    e = e - jax.lax.stop_gradient(e.max(axis=1, keepdims=True))
+    w = jnp.exp(e) * mask[..., None]
+    alpha = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)  # [N, K, H]
+    n, h_heads, dh = h_dst.shape
+    outs = []
+    for hh in range(h_heads):  # heads loop: small (≤8) static unroll
+        outs.append(
+            segment_spmm(
+                h_src[:, hh, :], nbr, alpha[:, :, hh], mean=False,
+                use_pallas=use_pallas, interpret=interpret,
+            )
+        )
+    return jnp.stack(outs, axis=1)  # [N, H, Dh]

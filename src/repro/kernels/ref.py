@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``<name>`` in kernels/ has a reference here with identical semantics;
+tests sweep shapes/dtypes and assert_allclose(kernel(interpret=True), ref).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_spmm(
+    h_src: jax.Array,  # [M, D]
+    nbr: jax.Array,  # [N, K] int32
+    mask: jax.Array,  # [N, K]
+    mean: bool = True,
+) -> jax.Array:
+    """Padded-neighbor sum/mean aggregation (the paper's SpMMCsr analogue)."""
+    hn = h_src[nbr]  # [N, K, D]
+    s = (hn * mask[..., None].astype(h_src.dtype)).sum(axis=1)
+    if mean:
+        d = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0).astype(h_src.dtype)
+        s = s / d
+    return s
+
+
+def fused_fp_na(
+    x_src: jax.Array,  # [M, F] raw features
+    w: jax.Array,  # [F, D] projection
+    nbr: jax.Array,  # [N, K]
+    mask: jax.Array,  # [N, K]
+    mean: bool = True,
+) -> jax.Array:
+    """Guideline (b): fused Feature Projection + Neighbor Aggregation.
+
+    Exploits linearity: aggregate raw features then project once —
+    mean_k(x[nbr]) @ W == mean_k(x[nbr] @ W).
+    """
+    return segment_spmm(x_src, nbr, mask, mean=mean) @ w
+
+
+def semantic_attention(
+    z: jax.Array,  # [P, N, D]
+    w: jax.Array,  # [D, Hs]
+    b: jax.Array,  # [Hs]
+    q: jax.Array,  # [Hs]
+) -> jax.Array:
+    """HAN semantic attention, concat-free. Matches core.semantics."""
+    s = jnp.tanh(z @ w + b)
+    wp = jnp.einsum("pnh,h->pn", s, q).mean(axis=1)
+    beta = jax.nn.softmax(wp)
+    return jnp.einsum("p,pnd->nd", beta, z)
+
+
+def mha_attention(
+    q: jax.Array,  # [B, S, H, Dh]
+    k: jax.Array,  # [B, S, KVH, Dh]
+    v: jax.Array,  # [B, S, KVH, Dh]
+    causal: bool = True,
+    window: int = 0,  # 0 = full; else sliding window size
+) -> jax.Array:
+    """GQA/MHA attention oracle (fp32 softmax)."""
+    b_, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b_, s, kvh, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    ids = jnp.arange(s)
+    m = jnp.ones((s, s), bool)
+    if causal:
+        m = m & (ids[:, None] >= ids[None, :])
+    if window:
+        m = m & (ids[:, None] - ids[None, :] < window)
+    scores = jnp.where(m, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v)
+    return out.reshape(b_, s, h, dh)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, H, Dh] single new token
+    k: jax.Array,  # [B, S, KVH, Dh] cache
+    v: jax.Array,  # [B, S, KVH, Dh]
+    kv_len: jax.Array | int,  # [B] or scalar: valid cache length
+) -> jax.Array:
+    b_, h, dh = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b_, kvh, g, dh)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    valid = jnp.arange(s)[None, :] < jnp.asarray(kv_len).reshape(-1, 1)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v)
+    return out.reshape(b_, h, dh)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: padded-neighbor SpMM (Neighbor Aggregation hot loop).
+
+The paper's NA hot kernel is ``SpMMCsr`` — irregular CSR gather + reduce,
+74% DRAM BW / 31% L2 hit on the T4.  TPUs have no efficient warp-level
+scatter, so the TPU-native formulation is a *degree-capped padded* layout
+``nbr[N, K]``: the irregular reduction becomes a K-step reduction tree over
+dense VMEM tiles (guideline (d): reduction-tree dataflow).
+
+Blocking: grid over row tiles of size ``block_n``; the neighbor-id tile and
+mask tile live in VMEM; the source feature table ``h_src`` is kept whole in
+VMEM (HGNN latent tables are small: N×D ≈ 4k×64 ≈ 1 MB ≪ 16 MB v5e VMEM).
+For tables that exceed VMEM the wrapper falls back to the XLA path — noted in
+ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(nbr_ref, mask_ref, hsrc_ref, out_ref, *, mean: bool):
+    nbr = nbr_ref[...]  # [BN, K] int32
+    mask = mask_ref[...]  # [BN, K]
+    h = hsrc_ref[...]  # [M, D] (whole table in VMEM)
+    k = nbr.shape[1]
+    acc = jnp.zeros((nbr.shape[0], h.shape[1]), jnp.float32)
+    # K-step reduction tree: each step is a dense row-gather + masked add.
+    for j in range(k):
+        rows = jnp.take(h, nbr[:, j], axis=0)  # [BN, D]
+        acc = acc + rows.astype(jnp.float32) * mask[:, j][:, None].astype(jnp.float32)
+    if mean:
+        deg = jnp.maximum(mask.astype(jnp.float32).sum(axis=1, keepdims=True), 1.0)
+        acc = acc / deg
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def segment_spmm(
+    h_src: jax.Array,
+    nbr: jax.Array,
+    mask: jax.Array,
+    mean: bool = True,
+    block_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    n, k = nbr.shape
+    m, d = h_src.shape
+    n_pad = (-n) % block_n
+    if n_pad:
+        nbr = jnp.pad(nbr, ((0, n_pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, n_pad), (0, 0)))
+    grid = ((n + n_pad) // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, mean=mean),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),  # whole feature table
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, d), h_src.dtype),
+        interpret=interpret,
+    )(nbr, mask, h_src)
+    return out[:n]

@@ -1,0 +1,105 @@
+"""Pallas TPU kernels: concat-free Semantic Aggregation.
+
+The paper shows SA paying 17.5% of its time in DR-Type concat plus
+memory-bound EW kernels (uEleWise 82.4% DRAM BW, Reduce 88.3%).  With the
+stacked ``[P, N, D]`` layout the concat disappears; these two kernels fuse the
+remaining chain so ``z`` is read from HBM exactly twice (once per pass)
+instead of 4-5 times in the unfused chain:
+
+  pass 1: w_p = mean_n( q · tanh(z_p,n W + b) )      (reduction tree -> [P])
+  pass 2: out_n = sum_p softmax(w)_p * z_p,n          (weighted reduce)
+
+The softmax over P (a length-P vector) happens on the host side of the two
+calls — it is O(P) work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(z_ref, w_ref, b_ref, q_ref, out_ref):
+    """Partial semantic scores for one row tile: out [P] += mean-partial."""
+    i = pl.program_id(0)
+    z = z_ref[...]  # [P, BN, D]
+    w = w_ref[...]  # [D, Hs]
+    b = b_ref[...]  # [1, Hs]
+    q = q_ref[...]  # [1, Hs]
+    s = jnp.tanh(z.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32))
+    part = (s * q.astype(jnp.float32)).sum(axis=-1).sum(axis=-1)  # [P]
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = part[None]
+
+    @pl.when(i != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + part[None]
+
+
+def _combine_kernel(z_ref, beta_ref, out_ref):
+    z = z_ref[...]  # [P, BN, D]
+    beta = beta_ref[...]  # [1, P]
+    out_ref[...] = jnp.einsum(
+        "p,pnd->nd", beta[0].astype(jnp.float32), z.astype(jnp.float32)
+    ).astype(out_ref.dtype)
+
+
+def semantic_scores(
+    z: jax.Array, w: jax.Array, b: jax.Array, q: jax.Array,
+    block_n: int = 512, interpret: bool = False,
+) -> jax.Array:
+    p, n, d = z.shape
+    hs = w.shape[1]
+    n_pad = (-n) % block_n
+    if n_pad:
+        z = jnp.pad(z, ((0, 0), (0, n_pad), (0, 0)))
+    grid = ((n + n_pad) // block_n,)
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, block_n, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((d, hs), lambda i: (0, 0)),
+            pl.BlockSpec((1, hs), lambda i: (0, 0)),
+            pl.BlockSpec((1, hs), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, p), jnp.float32),
+        interpret=interpret,
+    )(z, w, b[None, :], q[None, :])
+    return out[0] / n  # mean over nodes
+
+
+def semantic_combine(
+    z: jax.Array, beta: jax.Array, block_n: int = 512, interpret: bool = False
+) -> jax.Array:
+    p, n, d = z.shape
+    n_pad = (-n) % block_n
+    if n_pad:
+        z = jnp.pad(z, ((0, 0), (0, n_pad), (0, 0)))
+    grid = ((n + n_pad) // block_n,)
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, block_n, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad, d), z.dtype),
+        interpret=interpret,
+    )(z, beta[None, :].astype(jnp.float32))
+    return out[:n]
+
+
+def semantic_attention(
+    z: jax.Array, w: jax.Array, b: jax.Array, q: jax.Array,
+    block_n: int = 512, interpret: bool = False,
+) -> jax.Array:
+    wp = semantic_scores(z, w, b, q, block_n=block_n, interpret=interpret)
+    beta = jax.nn.softmax(wp)
+    return semantic_combine(z, beta, block_n=block_n, interpret=interpret)

@@ -1,0 +1,127 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and dump memory/cost/collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod --out results/
+
+Per cell this writes JSON with:
+  memory_analysis  (bytes/device: args, outputs, temps, code)
+  cost_analysis    (HLO flops / bytes accessed, per device)
+  collective_bytes (parsed from the compiled per-device HLO)
+  kernel-class breakdown (repro.core.characterize) + roofline terms
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_archs, long_context_supported
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+
+def run_cell(cfg: ModelConfig, shape: ShapeConfig, multi_pod: bool,
+             overrides=None):
+    from repro.core.characterize import analyze_compiled  # heavy import after flags
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    t0 = time.time()
+    built = build_step(cfg, shape, mesh)
+    jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                     out_shardings=built.out_shardings,
+                     donate_argnums=built.donate)
+    lowered = jitted.lower(*built.in_specs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    report = analyze_compiled(compiled, cfg=cfg, shape=shape, n_chips=n_chips)
+    report.update({
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+            "peak_device_gib": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes) / 2 ** 30, 3),
+        },
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+    })
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ModelConfig overrides (perf experiments)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    import os as _os
+
+    _os.makedirs(args.out, exist_ok=True)
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    overrides = json.loads(args.override) if args.override else None
+
+    failures = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            shape = SHAPES[shape_name]
+            if shape.name == "long_500k" and not long_context_supported(cfg):
+                print(f"SKIP {arch} x {shape_name}: full attention at 500k "
+                      f"(documented in DESIGN.md §4)")
+                continue
+            for mp in meshes:
+                tag = f"{arch}__{shape_name}__{'2x16x16' if mp else '16x16'}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                path = _os.path.join(args.out, tag + ".json")
+                if _os.path.exists(path) and overrides is None:
+                    print(f"CACHED {tag}")
+                    continue
+                print(f"RUN {tag} ...", flush=True)
+                try:
+                    rep = run_cell(cfg, shape, mp, overrides)
+                    with open(path, "w") as f:
+                        json.dump(rep, f, indent=1)
+                    print(f"OK  {tag}: peak={rep['memory']['peak_device_gib']}GiB "
+                          f"compile={rep['compile_s']}s "
+                          f"bound={rep['roofline']['bound']}", flush=True)
+                except Exception:
+                    failures += 1
+                    print(f"FAIL {tag}\n{traceback.format_exc()}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device state
+(the dry-run sets XLA_FLAGS before any jax import; smoke tests must keep
+seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model) — 'pod' is pure DP
+    across slices; gradient all-reduce is the only cross-pod collective."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(data: int = 2, model: int = 2):
+    """Small mesh over however many local devices exist (tests)."""
+    n = data * model
+    devs = jax.devices()[:n]
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    return Mesh(np.array(devs).reshape(data, model), ("data", "model"))

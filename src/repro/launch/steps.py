@@ -1,0 +1,156 @@
+"""Step builders: (arch config, shape, mesh) -> jit-able step + shardings.
+
+One entry per shape kind:
+  train_4k     -> train_step(state, batch)
+  prefill_32k  -> serve_prefill(params, batch) -> (logits, caches)
+  decode_*     -> serve_decode(params, token, caches, pos) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.specs import cache_shardings, input_shardings, input_specs
+from repro.dist.param_sharding import param_specs
+from repro.dist.sharding import BATCH, MODEL, use_mesh
+from repro.train.optimizer import build_optimizer
+from repro.train.train_step import (
+    TrainState,
+    init_train_state,
+    make_train_step,
+    state_shardings,
+)
+
+
+class BuiltStep(NamedTuple):
+    fn: Any  # callable to jit
+    in_specs: Tuple  # abstract inputs (ShapeDtypeStructs), positional
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple  # positional indices to donate
+
+
+def _logits_sharding(mesh: Mesh, shape) -> NamedSharding:
+    """[B, S, V] -> batch over (pod,data), vocab over model, with the
+    divisibility guard (mamba2's 50280 / seamless' 256206 vocab, batch=1)."""
+    from repro.dist.sharding import resolve_spec
+
+    return NamedSharding(mesh, resolve_spec(shape, (BATCH, None, MODEL), mesh))
+
+
+def _params_abstract(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        from repro.nn.encdec import init_encdec_params
+
+        return jax.eval_shape(lambda: init_encdec_params(jax.random.key(0), cfg))
+    from repro.nn.transformer import init_lm_params
+
+    return jax.eval_shape(lambda: init_lm_params(jax.random.key(0), cfg))
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     n_microbatches: int = 0) -> BuiltStep:
+    opt = build_optimizer(cfg)
+    step_fn = make_train_step(
+        cfg, opt, n_microbatches=n_microbatches or cfg.n_microbatches)
+
+    def fn(state, batch):
+        with use_mesh(mesh):
+            return step_fn(state, batch)
+
+    state_abs = jax.eval_shape(
+        lambda: init_train_state(jax.random.key(0), cfg, opt))
+    st_sh = state_shardings(state_abs, opt, mesh, fsdp=cfg.fsdp, fsdp_experts=cfg.fsdp_experts)
+    batch_abs = input_specs(cfg, shape)
+    batch_sh = input_shardings(cfg, shape, mesh)
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "grad_norm": NamedSharding(mesh, P())}
+    return BuiltStep(
+        fn=fn,
+        in_specs=(state_abs, batch_abs),
+        in_shardings=(st_sh, batch_sh),
+        out_shardings=(st_sh, metrics_sh),
+        donate=(0,),
+    )
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> BuiltStep:
+    if cfg.family == "encdec":
+        from repro.nn.encdec import encdec_prefill, init_encdec_params
+
+        def fn(params, batch):
+            with use_mesh(mesh):
+                return encdec_prefill(params, cfg, batch["frames"], batch["tokens"])
+    else:
+        from repro.nn.transformer import lm_prefill
+
+        def fn(params, batch):
+            with use_mesh(mesh):
+                return lm_prefill(params, cfg, batch["tokens"],
+                                  batch.get("extra_embeds"))
+
+    params_abs = _params_abstract(cfg)
+    p_sh = param_specs(params_abs, mesh, fsdp=cfg.fsdp, fsdp_experts=cfg.fsdp_experts)
+    batch_abs = input_specs(cfg, shape)
+    batch_sh = input_shardings(cfg, shape, mesh)
+    out_abs = jax.eval_shape(fn, params_abs, batch_abs)
+    logits_sh = _logits_sharding(mesh, out_abs[0].shape)
+    caches_sh = cache_shardings(cfg, mesh, out_abs[1])
+    return BuiltStep(
+        fn=fn,
+        in_specs=(params_abs, batch_abs),
+        in_shardings=(p_sh, batch_sh),
+        out_shardings=(logits_sh, caches_sh),
+        donate=(),
+    )
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> BuiltStep:
+    if cfg.family == "encdec":
+        from repro.nn.encdec import encdec_decode_step
+
+        def fn(params, token, caches, pos):
+            with use_mesh(mesh):
+                return encdec_decode_step(params, cfg, token, caches, pos)
+    else:
+        from repro.nn.transformer import lm_decode_step
+
+        def fn(params, token, caches, pos):
+            with use_mesh(mesh):
+                return lm_decode_step(params, cfg, token, caches, pos)
+
+    params_abs = _params_abstract(cfg)
+    p_sh = param_specs(params_abs, mesh, fsdp=cfg.fsdp, fsdp_experts=cfg.fsdp_experts)
+    ins = input_specs(cfg, shape)
+    ins_sh = input_shardings(cfg, shape, mesh)
+    out_abs = jax.eval_shape(fn, params_abs, ins["token"], ins["caches"], ins["pos"])
+    logits_sh = _logits_sharding(mesh, out_abs[0].shape)
+    return BuiltStep(
+        fn=fn,
+        in_specs=(params_abs, ins["token"], ins["caches"], ins["pos"]),
+        in_shardings=(p_sh, ins_sh["token"], ins_sh["caches"], ins_sh["pos"]),
+        out_shardings=(logits_sh, ins_sh["caches"]),
+        donate=(2,),
+    )
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, **kw) -> BuiltStep:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh)
+    return build_decode_step(cfg, shape, mesh)
+
+
+def jit_step(built: BuiltStep):
+    return jax.jit(
+        built.fn,
+        in_shardings=built.in_shardings,
+        out_shardings=built.out_shardings,
+        donate_argnums=built.donate,
+    )

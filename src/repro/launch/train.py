@@ -1,0 +1,87 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --steps 50 --ckpt-dir /tmp/ckpt
+
+On a real cluster: one process per host, ``jax.distributed.initialize()``
+first (see scripts/launch_multipod.sh), then the same code path — the mesh
+spans all hosts' devices and each host feeds its own data shard.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, get_reduced
+from repro.configs.base import ShapeConfig
+from repro.data.loader import PrefetchLoader, synth_batch
+from repro.dist.sharding import use_mesh
+from repro.launch.steps import build_train_step
+from repro.train import checkpoint as ckpt
+from repro.train.elastic import StepTimer
+from repro.train.optimizer import build_optimizer
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-runnable reduced config")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() (multi-host)")
+    args = ap.parse_args()
+
+    if args.distributed:
+        jax.distributed.initialize()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    shape = ShapeConfig("custom", args.seq_len, args.batch, "train")
+    opt = build_optimizer(cfg, total_steps=max(args.steps, 10))
+    step_fn = make_train_step(cfg, opt, n_microbatches=args.microbatches)
+    jitted = jax.jit(step_fn, donate_argnums=(0,))
+
+    state = init_train_state(jax.random.key(0), cfg, opt)
+    start = 0
+    if args.resume and args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        state = ckpt.restore(args.ckpt_dir, state)
+        start = int(state.step)
+        print(f"resumed from step {start}")
+
+    saver = ckpt.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    timer = StepTimer()
+    loader = PrefetchLoader(cfg, shape, start_step=start)
+    try:
+        for i in range(start, start + args.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(loader).items()}
+            t0 = time.time()
+            state, metrics = jitted(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            straggler = timer.observe(dt)
+            print(f"step {i:5d} loss {loss:8.4f} gnorm "
+                  f"{float(metrics['grad_norm']):7.3f} {dt*1e3:7.1f} ms"
+                  + ("  [straggler]" if straggler else ""), flush=True)
+            if saver and (i + 1) % args.ckpt_every == 0:
+                saver.submit(state, i + 1)
+        if saver:
+            saver.submit(state, start + args.steps)
+    finally:
+        loader.close()
+        if saver:
+            saver.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,363 @@
+"""GQA attention for the LM substrate.
+
+Three execution paths, one semantics (oracle: kernels/ref.py):
+
+* ``plain``   — materialized scores; smoke tests / small seq.
+* ``chunked`` — pure-JAX FlashAttention-2: outer ``lax.scan`` over q chunks,
+  inner scan over kv chunks, online softmax, **custom_vjp** backward that
+  recomputes score tiles (saves only O and the row logsumexp L). This is the
+  path the multi-pod dry-run lowers: it is memory-safe at 32k prefill / 4k
+  train and its HLO is what the roofline analysis reads.
+* Pallas ``flash_attention`` kernel — real-TPU hot path (cfg.use_pallas).
+
+Layouts: q [B, S, H, Dh]; k/v [B, S, KVH, Dh]. Internally [B, KVH, G, S, Dh]
+so GQA is explicit and the MXU sees 128-aligned matmuls.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import BATCH, MODEL, shard
+from repro.kernels import ref as kref
+from repro.nn.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (pure JAX, custom_vjp)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_for(s: int, target: int) -> int:
+    """Largest chunk <= target that divides s (vision/audio prefixes make
+    sequence lengths like 4352 = 4096 + 256)."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _mask(rows, cols, causal: bool, window: int):
+    m = jnp.ones(jnp.broadcast_shapes(rows.shape, cols.shape), bool)
+    if causal:
+        m &= rows >= cols
+    if window:
+        m &= rows - cols < window
+    return m
+
+
+def _fwd_scan(q5, k4, v4, causal, window, cq, ck, scale):
+    """q5 [B,KVH,G,Sq,Dh]; k4/v4 [B,KVH,Sk,Dh] -> (out5, L [B,KVH,G,Sq])."""
+    b, kvh, g, sq, dh = q5.shape
+    sk = k4.shape[2]
+    nq, nk = sq // cq, sk // ck
+    qch = jnp.moveaxis(q5.reshape(b, kvh, g, nq, cq, dh), 3, 0)  # [nq,...]
+    kch = jnp.moveaxis(k4.reshape(b, kvh, nk, ck, dh), 2, 0)  # [nk,...]
+    vch = jnp.moveaxis(v4.reshape(b, kvh, nk, ck, dh), 2, 0)
+
+    def one_q(qi, qc):
+        rows = qi * cq + jnp.arange(cq)
+
+        def kv_body(carry, inp):
+            m, l, acc = carry
+            ki, kc, vc = inp
+            cols = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bkgqd,bktd->bkgqt", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(rows[:, None], cols[None, :], causal, window)
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk, p, 0.0)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,bktd->bkgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, kvh, g, cq), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, cq), jnp.float32),
+            jnp.zeros((b, kvh, g, cq, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, init, (jnp.arange(nk), kch, vch))
+        l_safe = jnp.maximum(l, 1e-30)
+        out = (acc / l_safe[..., None]).astype(q5.dtype)
+        return out, m + jnp.log(l_safe)
+
+    _, (out_ch, l_ch) = jax.lax.scan(
+        lambda c, x: (c, one_q(x[0], x[1])), 0, (jnp.arange(nq), qch))
+    out = jnp.moveaxis(out_ch, 0, 3).reshape(b, kvh, g, sq, dh)
+    lse = jnp.moveaxis(l_ch, 0, 3).reshape(b, kvh, g, sq)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _chunked5(q5, k4, v4, causal, window, cq, ck):
+    scale = 1.0 / np.sqrt(q5.shape[-1])
+    out, _ = _fwd_scan(q5, k4, v4, causal, window, cq, ck, scale)
+    return out
+
+
+def _chunked5_fwd(q5, k4, v4, causal, window, cq, ck):
+    scale = 1.0 / np.sqrt(q5.shape[-1])
+    out, lse = _fwd_scan(q5, k4, v4, causal, window, cq, ck, scale)
+    return out, (q5, k4, v4, out, lse)
+
+
+def _chunked5_bwd(causal, window, cq, ck, res, dout):
+    q5, k4, v4, out, lse = res
+    scale = 1.0 / np.sqrt(q5.shape[-1])
+    b, kvh, g, sq, dh = q5.shape
+    sk = k4.shape[2]
+    nq, nk = sq // cq, sk // ck
+    dout = dout.astype(jnp.float32)
+    delta = (dout * out.astype(jnp.float32)).sum(-1)  # [B,KVH,G,Sq]
+
+    qch = jnp.moveaxis(q5.reshape(b, kvh, g, nq, cq, dh), 3, 0)
+    doch = jnp.moveaxis(dout.reshape(b, kvh, g, nq, cq, dh), 3, 0)
+    lch = jnp.moveaxis(lse.reshape(b, kvh, g, nq, cq), 3, 0)
+    dch = jnp.moveaxis(delta.reshape(b, kvh, g, nq, cq), 3, 0)
+    kch = jnp.moveaxis(k4.reshape(b, kvh, nk, ck, dh), 2, 0)
+    vch = jnp.moveaxis(v4.reshape(b, kvh, nk, ck, dh), 2, 0)
+
+    def p_tile(qc, kc, rows, cols, lse_c):
+        s = jnp.einsum("bkgqd,bktd->bkgqt", qc, kc,
+                       preferred_element_type=jnp.float32) * scale
+        msk = _mask(rows[:, None], cols[None, :], causal, window)
+        p = jnp.exp(jnp.where(msk, s, NEG_INF) - lse_c[..., None])
+        return jnp.where(msk, p, 0.0)
+
+    # pass 1: dQ — for each q chunk, scan kv chunks
+    def dq_chunk(carry, x):
+        qi, qc, do, lse_c, d_c = x
+        rows = qi * cq + jnp.arange(cq)
+
+        def body(dq, inp):
+            ki, kc, vc = inp
+            cols = ki * ck + jnp.arange(ck)
+            p = p_tile(qc, kc, rows, cols, lse_c)
+            dp = jnp.einsum("bkgqd,bktd->bkgqt", do, vc.astype(jnp.float32))
+            ds = p * (dp - d_c[..., None])
+            return dq + scale * jnp.einsum(
+                "bkgqt,bktd->bkgqd", ds, kc.astype(jnp.float32)), None
+
+        dq0 = jnp.zeros((b, kvh, g, cq, dh), jnp.float32)
+        dq, _ = jax.lax.scan(body, dq0, (jnp.arange(nk), kch, vch))
+        return carry, dq
+
+    _, dqch = jax.lax.scan(dq_chunk, 0, (jnp.arange(nq), qch, doch, lch, dch))
+    dq = jnp.moveaxis(dqch, 0, 3).reshape(b, kvh, g, sq, dh).astype(q5.dtype)
+
+    # pass 2: dK, dV — for each kv chunk, scan q chunks
+    def dkv_chunk(carry, x):
+        ki, kc, vc = x
+        cols = ki * ck + jnp.arange(ck)
+
+        def body(carry, inp):
+            dk, dv = carry
+            qi, qc, do, lse_c, d_c = inp
+            rows = qi * cq + jnp.arange(cq)
+            p = p_tile(qc, kc, rows, cols, lse_c)
+            dv = dv + jnp.einsum("bkgqt,bkgqd->bktd", p, do)
+            dp = jnp.einsum("bkgqd,bktd->bkgqt", do, vc.astype(jnp.float32))
+            ds = p * (dp - d_c[..., None])
+            dk = dk + scale * jnp.einsum(
+                "bkgqt,bkgqd->bktd", ds, qc.astype(jnp.float32))
+            return (dk, dv), None
+
+        init = (jnp.zeros((b, kvh, ck, dh), jnp.float32),
+                jnp.zeros((b, kvh, ck, dh), jnp.float32))
+        (dk, dv), _ = jax.lax.scan(
+            body, init, (jnp.arange(nq), qch, doch, lch, dch))
+        return carry, (dk, dv)
+
+    _, (dkch, dvch) = jax.lax.scan(dkv_chunk, 0, (jnp.arange(nk), kch, vch))
+    dk = jnp.moveaxis(dkch, 0, 2).reshape(b, kvh, sk, dh).astype(k4.dtype)
+    dv = jnp.moveaxis(dvch, 0, 2).reshape(b, kvh, sk, dh).astype(v4.dtype)
+    return dq, dk, dv
+
+
+_chunked5.defvjp(_chunked5_fwd, _chunked5_bwd)
+
+
+def chunked_attention(
+    q: jax.Array,  # [B, Sq, H, Dh]
+    k: jax.Array,  # [B, Sk, KVH, Dh]
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    chunk_q: int = 1024,
+    chunk_k: int = 1024,
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    sk = k.shape[1]
+    cq, ck = min(chunk_q, sq), min(chunk_k, sk)
+    assert sq % cq == 0 and sk % ck == 0, (sq, cq, sk, ck)
+    q5 = q.transpose(0, 2, 1, 3).reshape(b, kvh, h // kvh, sq, dh)
+    k4 = k.transpose(0, 2, 1, 3)
+    v4 = v.transpose(0, 2, 1, 3)
+    o5 = _chunked5(q5, k4, v4, causal, window, cq, ck)
+    return o5.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + path select + KV cache decode)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(rng: jax.Array, cfg, d_model: Optional[int] = None) -> Dict:
+    d = d_model or cfg.d_model
+    dh = cfg.resolved_head_dim
+    h0, kvh0 = cfg.n_heads, cfg.n_kv_heads
+    h, kvh = _heads(cfg)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    pd = jnp.dtype(cfg.param_dtype)
+    s = 1.0 / np.sqrt(d)
+
+    def col_padded(key, cols0, cols):
+        # padded head slices are ZERO-initialized: the padded model computes
+        # exactly the assigned architecture at init (padded heads emit zero
+        # attention output); they become extra trainable capacity afterwards.
+        w = jax.random.normal(key, (d, cols0)) * s
+        if cols > cols0:
+            w = jnp.concatenate([w, jnp.zeros((d, cols - cols0))], axis=1)
+        return w.astype(pd)
+
+    wo = jax.random.normal(k4, (h0 * dh, d)) * s / np.sqrt(2 * cfg.n_layers)
+    if h > h0:
+        wo = jnp.concatenate([wo, jnp.zeros(((h - h0) * dh, d))], axis=0)
+    return {
+        "wq": col_padded(k1, h0 * dh, h * dh),
+        "wk": col_padded(k2, kvh0 * dh, kvh * dh),
+        "wv": col_padded(k3, kvh0 * dh, kvh * dh),
+        "wo": wo.astype(pd),
+    }
+
+
+def _padded_heads(cfg) -> Tuple[int, int]:
+    """Heads padded up to a multiple of 16 (the 'model' axis) — beyond-paper
+    optimization for archs like arctic (56 q heads, 8 kv heads)."""
+    pad = lambda n: int(-(-n // 16) * 16)
+    return pad(cfg.n_heads), pad(cfg.n_kv_heads)
+
+
+def _heads(cfg) -> Tuple[int, int]:
+    return _padded_heads(cfg) if cfg.pad_heads_to_mesh else (cfg.n_heads, cfg.n_kv_heads)
+
+
+def qkv(params: Dict, cfg, x: jax.Array, positions: jax.Array, use_rope: bool = True):
+    """Project + rope. x [B,S,d] -> q [B,S,H,Dh], k/v [B,S,KVH,Dh]."""
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    h, kvh = _heads(cfg)
+    q = shard((x @ params["wq"]).reshape(b, s, h, dh), BATCH, None, MODEL, None)
+    k = shard((x @ params["wk"]).reshape(b, s, kvh, dh), BATCH, None, MODEL, None)
+    v = shard((x @ params["wv"]).reshape(b, s, kvh, dh), BATCH, None, MODEL, None)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(
+    params: Dict,
+    cfg,
+    x: jax.Array,  # [B, S, d]
+    positions: jax.Array,  # [S] or [B, S]
+    causal: bool = True,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+    return_kv: bool = False,
+    use_rope: bool = True,
+):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    b, s, d = x.shape
+    q, k, v = qkv(params, cfg, x, positions, use_rope=use_rope)
+    if kv_override is not None:  # cross-attention: kv from encoder
+        k, v = kv_override
+    window = cfg.sliding_window
+    if cfg.use_pallas and jax.default_backend() == "tpu":
+        from repro.kernels.flash_attention import flash_attention
+
+        o = flash_attention(q, k, v, causal=causal, window=window)
+    elif s <= 1024 and k.shape[1] <= 1024:
+        o = kref.mha_attention(q, k, v, causal=causal, window=window) \
+            if k.shape[1] == s else _plain_cross(q, k, v)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, window=window,
+                              chunk_q=_chunk_for(s, cfg.attn_chunk),
+                              chunk_k=_chunk_for(k.shape[1], cfg.attn_chunk))
+    o = shard(o, BATCH, None, MODEL, None)
+    out = o.reshape(b, s, -1) @ params["wo"]
+    # sequence-parallel epilogue (Megatron SP): scatter the seq dim back
+    out = shard(out, BATCH, MODEL if cfg.seq_shard_activations else None, None)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _plain_cross(q, k, v):
+    """Non-causal cross attention with mismatched lengths (small seq)."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    p = jax.nn.softmax(s / np.sqrt(dh), axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", p, v).reshape(b, sq, h, dh)
+
+
+# ---------------- decode (single token, KV cache) ----------------
+
+
+def decode_attention_block(
+    params: Dict,
+    cfg,
+    x: jax.Array,  # [B, 1, d]
+    cache_k: jax.Array,  # [B, S, KVH, Dh]
+    cache_v: jax.Array,
+    pos: jax.Array,  # [] int32 current position (same across batch)
+):
+    """One decode step: update cache at ``pos``, attend over the cache.
+
+    The cache's sequence dim is sharded over 'model' (flash-decode layout,
+    cfg.decode_kv_shard_seq); XLA turns the masked softmax into partial
+    max/sum + all-reduce across the model axis.
+    """
+    b, _, d = x.shape
+    dh = cfg.resolved_head_dim
+    h, kvh = _heads(cfg)
+    smax = cache_k.shape[1]
+    q = (x @ params["wq"]).reshape(b, 1, h, dh)
+    k_new = (x @ params["wk"]).reshape(b, 1, kvh, dh)
+    v_new = (x @ params["wv"]).reshape(b, 1, kvh, dh)
+    pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (b,))
+    q = apply_rope(q, pos_b[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos_b[:, None], cfg.rope_theta)
+    # ring-buffer write for sliding window, plain write otherwise
+    widx = (pos % smax) if cfg.sliding_window else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), widx, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), widx, axis=1)
+    seq_spec = MODEL if cfg.decode_kv_shard_seq else None
+    kvh_spec = None if cfg.decode_kv_shard_seq else MODEL
+    cache_k = shard(cache_k, BATCH, seq_spec, kvh_spec, None)
+    cache_v = shard(cache_v, BATCH, seq_spec, kvh_spec, None)
+    kv_len = jnp.minimum(pos + 1, smax)
+    if cfg.use_pallas and jax.default_backend() == "tpu":
+        from repro.kernels.decode_attention import decode_attention as pl_dec
+
+        o = pl_dec(q[:, 0], cache_k, cache_v, kv_len)
+    else:
+        o = kref.decode_attention(q[:, 0], cache_k, cache_v, kv_len)
+    o = shard(o, BATCH, MODEL, None)
+    out = o.reshape(b, 1, -1) @ params["wo"]
+    return shard(out, BATCH, None, None), cache_k, cache_v

@@ -1,0 +1,201 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder consumes precomputed audio frame embeddings (the modality frontend is
+a stub per the brief — ``input_specs`` provides [B, S_src, d] frames).
+Decoder: causal self-attention (+KV cache) + cross-attention to the encoder
+output (cross-KV precomputed once at prefill, rope-free) + SwiGLU MLP.
+Both sides scan over stacked layers like transformer.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import BATCH, MODEL, shard
+from repro.kernels import ref as kref
+from repro.nn import attention as attn
+from repro.nn.mlp import init_mlp, mlp_block
+from repro.nn.norm import init_rmsnorm, rmsnorm
+from repro.nn.transformer import _remat, chunked_ce
+
+
+def _enc_block_init(rng, cfg):
+    k1, k2 = jax.random.split(rng)
+    d = cfg.d_model
+    return {
+        "ln1": init_rmsnorm(d),
+        "attn": attn.init_attention(k1, cfg),
+        "ln2": init_rmsnorm(d),
+        "mlp": init_mlp(k2, d, cfg.d_ff, cfg.n_layers, cfg.param_dtype),
+    }
+
+
+def _dec_block_init(rng, cfg):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d = cfg.d_model
+    return {
+        "ln1": init_rmsnorm(d),
+        "self_attn": attn.init_attention(k1, cfg),
+        "ln2": init_rmsnorm(d),
+        "cross_attn": attn.init_attention(k2, cfg),
+        "ln3": init_rmsnorm(d),
+        "mlp": init_mlp(k3, d, cfg.d_ff, cfg.n_layers, cfg.param_dtype),
+    }
+
+
+def init_encdec_params(rng: jax.Array, cfg: ModelConfig) -> Dict:
+    keys = jax.random.split(rng, 6)
+    d, v = cfg.d_model, cfg.vocab
+    pd = jnp.dtype(cfg.param_dtype)
+    enc = [_enc_block_init(jax.random.fold_in(keys[0], j), cfg)
+           for j in range(cfg.enc_layers)]
+    dec = [_dec_block_init(jax.random.fold_in(keys[1], j), cfg)
+           for j in range(cfg.dec_layers)]
+    return {
+        "embed": (jax.random.normal(keys[2], (v, d)) * 0.02).astype(pd),
+        "enc": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "ln_enc": init_rmsnorm(d),
+        "ln_f": init_rmsnorm(d),
+        "lm_head": (jax.random.normal(keys[3], (d, v)) / np.sqrt(d)).astype(pd),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames [B, Ss, d] -> encoder hidden [B, Ss, d] (bidirectional)."""
+    x = shard(frames.astype(jnp.dtype(cfg.dtype)), BATCH, None, None)
+    positions = jnp.arange(x.shape[1])
+
+    def body(xc, p):
+        h = attn.attention_block(p["attn"], cfg, rmsnorm(p["ln1"], xc, cfg.norm_eps),
+                                 positions, causal=False)
+        xc = xc + h
+        xc = xc + mlp_block(p["mlp"], rmsnorm(p["ln2"], xc, cfg.norm_eps))
+        return xc, None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc"])
+    return rmsnorm(params["ln_enc"], x, cfg.norm_eps)
+
+
+def _cross_kv(p, cfg, enc_out):
+    b, ss, _ = enc_out.shape
+    dh = cfg.resolved_head_dim
+    _, kvh = attn._heads(cfg)
+    k = shard((enc_out @ p["wk"]).reshape(b, ss, kvh, dh), BATCH, None, MODEL, None)
+    v = shard((enc_out @ p["wv"]).reshape(b, ss, kvh, dh), BATCH, None, MODEL, None)
+    return k, v
+
+
+def decode_train(params, cfg: ModelConfig, tokens: jax.Array, enc_out: jax.Array):
+    """Teacher-forced decoder pass -> hidden [B, St, d]."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = shard(x, BATCH, None, None)
+    positions = jnp.arange(x.shape[1])
+
+    def body(xc, p):
+        h = attn.attention_block(p["self_attn"], cfg,
+                                 rmsnorm(p["ln1"], xc, cfg.norm_eps), positions, causal=True)
+        xc = xc + h
+        kv = _cross_kv(p["cross_attn"], cfg, enc_out)
+        h = attn.attention_block(p["cross_attn"], cfg,
+                                 rmsnorm(p["ln2"], xc, cfg.norm_eps), positions,
+                                 causal=False, kv_override=kv, use_rope=False)
+        xc = xc + h
+        xc = xc + mlp_block(p["mlp"], rmsnorm(p["ln3"], xc, cfg.norm_eps))
+        return xc, None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["dec"])
+    return x
+
+
+def encdec_forward(params, cfg: ModelConfig, frames, tokens):
+    enc_out = encode(params, cfg, frames)
+    h = decode_train(params, cfg, tokens, enc_out)
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    return h @ params["lm_head"]
+
+
+def encdec_loss(params, cfg: ModelConfig, batch: Dict):
+    h = decode_train(params, cfg, batch["tokens"],
+                     encode(params, cfg, batch["frames"]))
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    chunk_tokens = max(8, int(2 ** 24 / max(cfg.vocab, 1)))
+    return chunked_ce(h, params["lm_head"], jnp.maximum(labels, 0), mask, chunk_tokens)
+
+
+# ---------------- serving ----------------
+
+
+def encdec_prefill(params, cfg: ModelConfig, frames, tokens):
+    """Encode + teacher-forced prefix -> (last logits, caches).
+
+    caches = {"self": {k,v stacked [L,...]}, "cross": {k,v [L,...]}}.
+    """
+    enc_out = encode(params, cfg, frames)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(x.shape[1])
+
+    def body(xc, p):
+        h, kv_self = attn.attention_block(
+            p["self_attn"], cfg, rmsnorm(p["ln1"], xc, cfg.norm_eps), positions,
+            causal=True, return_kv=True)
+        xc = xc + h
+        kv_cross = _cross_kv(p["cross_attn"], cfg, enc_out)
+        h = attn.attention_block(p["cross_attn"], cfg,
+                                 rmsnorm(p["ln2"], xc, cfg.norm_eps), positions,
+                                 causal=False, kv_override=kv_cross, use_rope=False)
+        xc = xc + h
+        xc = xc + mlp_block(p["mlp"], rmsnorm(p["ln3"], xc, cfg.norm_eps))
+        return xc, {"self_k": kv_self[0], "self_v": kv_self[1],
+                    "cross_k": kv_cross[0], "cross_v": kv_cross[1]}
+
+    x, caches = jax.lax.scan(body, x, params["dec"])
+    h = rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    return h @ params["lm_head"], caches
+
+
+def init_encdec_caches(cfg: ModelConfig, batch: int, max_len: int, src_len: int):
+    dh = cfg.resolved_head_dim
+    _, kvh = attn._heads(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    L = cfg.dec_layers
+    return {
+        "self_k": jnp.zeros((L, batch, max_len, kvh, dh), dt),
+        "self_v": jnp.zeros((L, batch, max_len, kvh, dh), dt),
+        "cross_k": jnp.zeros((L, batch, src_len, kvh, dh), dt),
+        "cross_v": jnp.zeros((L, batch, src_len, kvh, dh), dt),
+    }
+
+
+def encdec_decode_step(params, cfg: ModelConfig, token, caches, pos):
+    """token [B,1]; caches dict of stacked [L,...]; pos [] int32."""
+    x = jnp.take(params["embed"], token, axis=0).astype(jnp.dtype(cfg.dtype))
+    src_len = caches["cross_k"].shape[2]
+
+    def body(xc, xs):
+        p, ck, cv, xk, xv = xs
+        h, nk, nv = attn.decode_attention_block(
+            p["self_attn"], cfg, rmsnorm(p["ln1"], xc, cfg.norm_eps), ck, cv, pos)
+        xc = xc + h
+        # cross attention: rope-free q over static cross KV
+        b = xc.shape[0]
+        dh = cfg.resolved_head_dim
+        h_, _ = attn._heads(cfg)
+        q = (rmsnorm(p["ln2"], xc, cfg.norm_eps) @ p["cross_attn"]["wq"]).reshape(b, h_, dh)
+        o = kref.decode_attention(q, xk, xv, src_len)
+        xc = xc + o.reshape(b, 1, -1) @ p["cross_attn"]["wo"]
+        xc = xc + mlp_block(p["mlp"], rmsnorm(p["ln3"], xc, cfg.norm_eps))
+        return xc, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec"], caches["self_k"], caches["self_v"],
+                  caches["cross_k"], caches["cross_v"]))
+    caches = dict(caches, self_k=nk, self_v=nv)
+    h = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return h @ params["lm_head"], caches

@@ -1,0 +1,31 @@
+"""SwiGLU MLP with tensor parallelism over 'model' (Megatron layout:
+up/gate column-sharded, down row-sharded -> one all-reduce per block)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import BATCH, MODEL, shard
+
+
+def init_mlp(rng: jax.Array, d: int, d_ff: int, n_layers: int, param_dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    pd = jnp.dtype(param_dtype)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "w_gate": (jax.random.normal(k1, (d, d_ff)) * s).astype(pd),
+        "w_up": (jax.random.normal(k2, (d, d_ff)) * s).astype(pd),
+        "w_down": (jax.random.normal(k3, (d_ff, d)) * s / np.sqrt(2 * n_layers)).astype(pd),
+    }
+
+
+def mlp_block(params: Dict, x: jax.Array, seq_shard: bool = False) -> jax.Array:
+    g = shard(x @ params["w_gate"], BATCH, None, MODEL)
+    u = shard(x @ params["w_up"], BATCH, None, MODEL)
+    h = jax.nn.silu(g) * u
+    out = h @ params["w_down"]
+    # sequence-parallel epilogue: reduce-scatter instead of all-reduce
+    return shard(out, BATCH, MODEL if seq_shard else None, None)

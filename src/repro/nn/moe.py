@@ -1,0 +1,120 @@
+"""Top-k routed Mixture-of-Experts (GShard-style capacity dispatch).
+
+Token-choice top-k routing with a static per-expert capacity
+``C = ceil(T/E * k * capacity_factor)``; overflow tokens drop to the dense
+residual (arctic) or to the residual stream.  Dispatch/combine are expressed
+as scatter-add / gather so the compiled HLO shows the paper's TB-Type
+(topology = routing table) + DR-Type (permute) classes explicitly — the MoE
+analogue of neighbor aggregation, which is exactly where the characterizer
+places it (DESIGN.md §4).
+
+Sharding: expert dim over 'model' (EP); token dim over ('pod','data').
+XLA inserts the dispatch all-to-all at the scatter boundary.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.dist.sharding import BATCH, MODEL, shard
+from repro.nn.mlp import init_mlp, mlp_block
+
+
+def init_moe(rng: jax.Array, d: int, cfg_moe: MoEConfig, n_layers: int,
+             param_dtype) -> Dict:
+    e, ff = cfg_moe.n_experts, cfg_moe.d_ff_expert
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    pd = jnp.dtype(param_dtype)
+    s = 1.0 / np.sqrt(d)
+    params = {
+        "router": (jax.random.normal(k1, (d, e)) * s).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (e, d, ff)) * s).astype(pd),
+        "w_up": (jax.random.normal(k3, (e, d, ff)) * s).astype(pd),
+        "w_down": (jax.random.normal(k4, (e, ff, d)) * s / np.sqrt(2 * n_layers)).astype(pd),
+    }
+    if cfg_moe.dense_residual_ff:
+        params["dense"] = init_mlp(k5, d, cfg_moe.dense_residual_ff, n_layers, param_dtype)
+    return params
+
+
+def _capacity(t: int, cfg_moe: MoEConfig) -> int:
+    c = int(np.ceil(t * cfg_moe.top_k / cfg_moe.n_experts * cfg_moe.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def moe_block(params: Dict, x: jax.Array, cfg_moe: MoEConfig,
+              n_groups: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """x [B, S, d] -> (out [B, S, d], aux_loss scalar).
+
+    GROUP-LOCAL dispatch (GShard local groups): tokens are split into
+    ``n_groups`` groups aligned with the batch dim; routing positions are
+    cumsum'd within each group, so the dispatch scatter never crosses data
+    shards.  Measured on phi3.5-moe train_4k (EXPERIMENTS.md §Perf H-B1):
+    global cumsum forces GSPMD to all-reduce the full [E,C,d] buffer every
+    layer (963 GiB/step/device); group-local turns it into the single
+    dispatch all-to-all.  Default n_groups = batch size (every sequence its
+    own group).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg_moe.n_experts, cfg_moe.top_k
+    g_n = n_groups or b
+    tg = t // g_n  # tokens per group
+    cap = _capacity(tg, cfg_moe)
+    xt = x.reshape(g_n, tg, d)
+    xt = shard(xt, BATCH, None, None)
+
+    # ---- router (fp32) ----
+    logits = xt.astype(jnp.float32) @ params["router"]  # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)  # [G, Tg, k]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- group-local position-in-expert (cumsum within each group) ----
+    e_flat = gate_idx.reshape(g_n, tg * k)  # expert id per choice
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)  # [G, Tg*k, E]
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos_in_e = jnp.take_along_axis(pos, e_flat[..., None], axis=2)[..., 0]
+    keep = pos_in_e < cap  # [G, Tg*k]
+    w_flat = gate_w.reshape(g_n, tg * k) * keep.astype(jnp.float32)
+
+    # ---- dispatch: per-group scatter into [G, E, C, d] (TB-Type) ----
+    tok_idx = jnp.repeat(jnp.arange(tg), k)  # [Tg*k] (same for every group)
+    safe_pos = jnp.where(keep, pos_in_e, cap - 1)
+    gather = jnp.take(xt, tok_idx, axis=1)  # [G, Tg*k, d]
+    gather = gather * keep[..., None].astype(x.dtype)
+    xe = jnp.zeros((g_n, e, cap, d), x.dtype)
+    gid = jnp.broadcast_to(jnp.arange(g_n)[:, None], e_flat.shape)
+    xe = xe.at[gid, e_flat, safe_pos].add(gather, mode="drop")
+    # Sharding choice (measured, §Perf): experts over 'model', groups
+    # unsharded in the buffer. H-B3 (groups@data too) makes GSPMD replicate
+    # the scatter (coll 31->210s); H-B5 (groups@data only, experts via the
+    # einsum weights) trades the all-reduce for a larger collective-permute
+    # (34.7s vs 31.1s). H-B1 (this form) won on both cells.
+    xe = shard(xe, None, MODEL, None, None)
+
+    # ---- expert FFN (DM-Type, batched over experts) ----
+    gact = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]))
+    u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", gact * u, params["w_down"])
+    ye = shard(ye, None, MODEL, None, None)
+
+    # ---- combine: gather back + weighted sum over the k choices ----
+    yt = ye[gid, e_flat, safe_pos] * w_flat[..., None].astype(x.dtype)
+    tok2 = jnp.broadcast_to(tok_idx[None, :], (g_n, tg * k))
+    out = jnp.zeros((g_n, tg, d), x.dtype).at[gid, tok2].add(yt, mode="drop")
+    out = out.reshape(b, s, d)
+    out = shard(out, BATCH, None, None)
+
+    if "dense" in params:  # arctic: parallel dense residual FFN
+        out = out + mlp_block(params["dense"], x)
+    return out, aux

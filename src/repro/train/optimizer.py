@@ -1,0 +1,188 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor (factored second
+moment — what lets arctic-480b's optimizer state fit a 256-chip pod), plus
+warmup+cosine schedule and global-norm clipping.
+
+Each optimizer exposes (init, update) and ``state_specs`` so the distributed
+runtime can shard optimizer state exactly like (or factored from) the params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * (step + 1) / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(np.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (new_params, new_state)
+    state_specs: Callable  # (param_spec_tree, mesh) -> state spec tree
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          state_dtype="float32") -> Optimizer:
+    sd = jnp.dtype(state_dtype)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, sd)
+        return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            step_v = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            p_new = p.astype(jnp.float32) - lr * (step_v + weight_decay * p.astype(jnp.float32))
+            return p_new.astype(p.dtype), m_new.astype(sd), v_new.astype(sd)
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        p_new = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return p_new, AdamWState(mu, nu)
+
+    def state_specs(param_specs, mesh):
+        return AdamWState(param_specs, param_specs)
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum)
+# ---------------------------------------------------------------------------
+
+
+class AdafactorState(NamedTuple):
+    vr: Any  # row stats:  param reduced over dim -1
+    vc: Any  # col stats:  param reduced over dim -2
+    v: Any  # full stats for rank<2 leaves (zeros-sized elsewhere)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor(lr_fn, decay=0.99, eps=1e-30, clip_thresh=1.0,
+              weight_decay=0.0) -> Optimizer:
+    def init(params):
+        def vr(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) else jnp.zeros((1,), jnp.float32)
+
+        def vc(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p) else jnp.zeros((1,), jnp.float32))
+
+        def v(p):
+            return jnp.zeros(p.shape, jnp.float32) if not _factored(p) else jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(jax.tree.map(vr, params), jax.tree.map(vc, params),
+                              jax.tree.map(v, params))
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+
+        def upd(g, vr, vc, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr_new = decay * vr + (1 - decay) * g2.mean(axis=-1)
+                vc_new = decay * vc + (1 - decay) * g2.mean(axis=-2)
+                denom = (vr_new[..., None] / jnp.maximum(
+                    vr_new.mean(axis=-1, keepdims=True)[..., None], eps)) * vc_new[..., None, :]
+                u = g / jnp.sqrt(jnp.maximum(denom, eps))
+                v_new = v
+            else:
+                v_new = decay * v + (1 - decay) * g2
+                u = g / jnp.sqrt(jnp.maximum(v_new, eps))
+                vr_new, vc_new = vr, vc
+            # update clipping (RMS(u) <= clip_thresh)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_thresh)
+            p_new = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+            return p_new.astype(p.dtype), vr_new, vc_new, v_new
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, state.v, params)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), AdafactorState(pick(1), pick(2), pick(3))
+
+    def state_specs(param_specs, mesh):
+        def drop(ns, which):
+            spec = list(ns.spec) + [None] * 8
+            # factored stats: spec of the param with one dim removed
+            return spec
+
+        def vr_spec(ns):
+            s = list(ns.spec)
+            if len(s) >= 2:
+                return NamedSharding(mesh, P(*s[:-1]))
+            return NamedSharding(mesh, P())
+
+        def vc_spec(ns):
+            s = list(ns.spec)
+            if len(s) >= 2:
+                return NamedSharding(mesh, P(*(s[:-2] + s[-1:])))
+            return NamedSharding(mesh, P())
+
+        def v_spec(ns):
+            return ns if len(ns.spec) < 2 else NamedSharding(mesh, P())
+
+        return AdafactorState(
+            jax.tree.map(vr_spec, param_specs),
+            jax.tree.map(vc_spec, param_specs),
+            jax.tree.map(v_spec, param_specs),
+        )
+
+    return Optimizer(init, update, state_specs)
+
+
+def build_optimizer(cfg, total_steps: int = 10_000) -> Optimizer:
+    lr = warmup_cosine(3e-4, min(500, total_steps // 10 + 1), total_steps)
+    if cfg.optimizer == "adafactor":
+        return adafactor(lr)
+    return adamw(lr, state_dtype=cfg.opt_state_dtype)

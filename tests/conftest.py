@@ -1,0 +1,39 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see 1 device;
+multi-device tests spawn subprocesses (tests/test_dist.py)."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core.hgraph import HeteroGraph
+
+
+@pytest.fixture(scope="session")
+def tiny_hg() -> HeteroGraph:
+    """Small deterministic bipartite-ish HG (movie/director/actor style)."""
+    rng = np.random.default_rng(7)
+    counts = {"M": 40, "D": 15, "A": 25}
+    dims = {"M": 12, "D": 8, "A": 10}
+    feats = {t: rng.standard_normal((n, dims[t])).astype(np.float32)
+             for t, n in counts.items()}
+
+    def rand_rel(ns, nd, e):
+        r = rng.integers(0, ns, e)
+        c = rng.integers(0, nd, e)
+        return sp.csr_matrix((np.ones(e, np.float32), (r, c)), shape=(ns, nd))
+
+    md = rand_rel(40, 15, 60)
+    ma = rand_rel(40, 25, 80)
+    g = HeteroGraph(
+        counts, feats,
+        {("M", "md", "D"): md, ("D", "dm", "M"): md.T.tocsr(),
+         ("M", "ma", "A"): ma, ("A", "am", "M"): ma.T.tocsr()},
+        name="tiny")
+    g.validate()
+    return g
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg_base():
+    return dict(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                vocab=101, dtype="float32", param_dtype="float32",
+                remat="full", attn_chunk=16)

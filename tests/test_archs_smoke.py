@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests: every assigned arch instantiates in its
+REDUCED config and runs one forward + one train step on CPU, asserting
+output shapes and finite values (the brief's requirement (f))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced, list_archs
+from repro.configs.base import ShapeConfig
+from repro.data.loader import synth_batch
+from repro.train.optimizer import build_optimizer
+from repro.train.train_step import init_train_state, make_train_step
+
+ARCHS = list_archs()
+SMOKE_SHAPE = ShapeConfig("smoke", 32, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_smoke(arch):
+    cfg = get_reduced(arch)
+    batch = {k: jnp.asarray(v) for k, v in
+             synth_batch(cfg, SMOKE_SHAPE, step=0).items()}
+    if cfg.family == "encdec":
+        from repro.nn.encdec import encdec_forward, init_encdec_params
+
+        params = init_encdec_params(jax.random.key(0), cfg)
+        logits = encdec_forward(params, cfg, batch["frames"], batch["tokens"])
+    else:
+        from repro.nn.transformer import init_lm_params, lm_forward
+
+        params = init_lm_params(jax.random.key(0), cfg)
+        logits, _ = lm_forward(params, cfg, batch["tokens"],
+                               batch.get("extra_embeds"))
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_reduced(arch)
+    opt = build_optimizer(cfg, total_steps=10)
+    step = make_train_step(cfg, opt)
+    state = init_train_state(jax.random.key(0), cfg, opt)
+    batch = {k: jnp.asarray(v) for k, v in
+             synth_batch(cfg, SMOKE_SHAPE, step=0).items()}
+    state, metrics = jax.jit(step)(state, batch)
+    assert int(state.step) == 1
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    # params actually changed
+    leaf0 = jax.tree.leaves(state.params)[0]
+    assert bool(jnp.isfinite(leaf0).all())
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "mamba2-2.7b", "zamba2-1.2b",
+                                  "h2o-danube-3-4b"])
+def test_loss_decreases_on_fixed_batch(arch):
+    """A few steps on one repeated batch must reduce loss (overfit sanity)."""
+    cfg = get_reduced(arch)
+    opt = build_optimizer(cfg, total_steps=30)
+    step = jax.jit(make_train_step(cfg, opt))
+    state = init_train_state(jax.random.key(0), cfg, opt)
+    batch = {k: jnp.asarray(v) for k, v in
+             synth_batch(cfg, ShapeConfig("s", 16, 2, "train"), step=0).items()}
+    first = None
+    for _ in range(8):
+        state, m = step(state, batch)
+        if first is None:
+            first = float(m["loss"])
+    assert float(m["loss"]) < first, (arch, first, float(m["loss"]))
+
+
+def test_full_configs_match_assignment():
+    """Exact architecture hyperparameters from the assignment table."""
+    from repro.configs import get_config
+
+    c = get_config("arctic-480b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (35, 7168, 56, 8, 4864, 32000)
+    assert c.moe.n_experts == 128 and c.moe.top_k == 2 \
+        and c.moe.dense_residual_ff == 4864
+    c = get_config("phi3.5-moe-42b-a6.6b")
+    assert (c.n_layers, c.d_model, c.moe.n_experts, c.moe.top_k, c.vocab) \
+        == (32, 4096, 16, 2, 32064)
+    c = get_config("internvl2-76b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (80, 8192, 64, 8, 28672, 128256)
+    c = get_config("mamba2-2.7b")
+    assert (c.n_layers, c.d_model, c.ssm.d_state, c.vocab) == (64, 2560, 128, 50280)
+    c = get_config("granite-8b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (36, 4096, 32, 8, 14336, 49152)
+    c = get_config("smollm-360m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (32, 960, 15, 5, 2560, 49152)
+    c = get_config("h2o-danube-3-4b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (24, 3840, 32, 8, 10240, 32000)
+    assert c.sliding_window > 0
+    c = get_config("codeqwen1.5-7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) \
+        == (32, 4096, 32, 32, 13440, 92416)
+    c = get_config("seamless-m4t-medium")
+    assert (c.enc_layers, c.dec_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) \
+        == (12, 12, 1024, 16, 4096, 256206)
+    c = get_config("zamba2-1.2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab,
+            c.ssm.d_state) == (38, 2048, 32, 8192, 32000, 64)
+
+
+def test_param_counts_in_expected_range():
+    """Analytic param counts are within 25% of the advertised sizes."""
+    from repro.configs import get_config
+    from repro.core.characterize import analytic_param_counts
+
+    for arch, lo, hi in [("arctic-480b", 360e9, 600e9),
+                         ("internvl2-76b", 57e9, 95e9),
+                         ("granite-8b", 6e9, 10e9),
+                         ("mamba2-2.7b", 2.0e9, 3.4e9),
+                         ("smollm-360m", 0.27e9, 0.45e9),
+                         ("zamba2-1.2b", 0.9e9, 1.6e9)]:
+        total, active = analytic_param_counts(get_config(arch))
+        assert lo <= total <= hi, (arch, total)
+        assert active <= total

@@ -1,0 +1,107 @@
+"""Per-kernel validation: Pallas interpret=True vs the ref.py oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_fp_na import fused_fp_na
+from repro.kernels.segment_spmm import segment_spmm
+from repro.kernels.semantic_attn import semantic_attention
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+@pytest.mark.parametrize("n,m,k,d", [(17, 23, 5, 8), (128, 64, 16, 64),
+                                     (257, 300, 9, 33)])
+@pytest.mark.parametrize("mean", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_spmm(n, m, k, d, mean, dtype):
+    h = _arr((m, d), dtype)
+    nbr = jnp.asarray(RNG.integers(0, m, (n, k)), jnp.int32)
+    mask = jnp.asarray(RNG.random((n, k)) < 0.7, jnp.float32)
+    got = segment_spmm(h, nbr, mask, mean=mean, interpret=True, block_n=64)
+    want = ref.segment_spmm(h, nbr, mask, mean=mean)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,m,k,f,d,bf", [(33, 50, 4, 20, 16, 8),
+                                          (100, 80, 8, 70, 32, 32)])
+def test_fused_fp_na(n, m, k, f, d, bf):
+    x = _arr((m, f))
+    w = _arr((f, d))
+    nbr = jnp.asarray(RNG.integers(0, m, (n, k)), jnp.int32)
+    mask = jnp.asarray(RNG.random((n, k)) < 0.8, jnp.float32)
+    got = fused_fp_na(x, w, nbr, mask, interpret=True, block_n=32, block_f=bf)
+    want = ref.fused_fp_na(x, w, nbr, mask)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("p,n,d,hs", [(2, 50, 16, 8), (5, 130, 32, 16)])
+def test_semantic_attention(p, n, d, hs):
+    z = _arr((p, n, d))
+    w, b, q = _arr((d, hs)), _arr((hs,)), _arr((hs,))
+    got = semantic_attention(z, w, b, q, block_n=32, interpret=True)
+    want = ref.semantic_attention(z, w, b, q)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("s,h,kvh,dh,bq,bk", [(128, 4, 2, 32, 32, 32),
+                                              (256, 8, 8, 16, 64, 128),
+                                              (128, 6, 2, 64, 128, 64)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 40)])
+def test_flash_attention(s, h, kvh, dh, bq, bk, causal, window):
+    q = _arr((2, s, h, dh), scale=0.5)
+    k = _arr((2, s, kvh, dh), scale=0.5)
+    v = _arr((2, s, kvh, dh), scale=0.5)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=bq, block_k=bk, interpret=True)
+    want = ref.mha_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = _arr((1, 128, 4, 32), dtype, 0.5)
+    k = _arr((1, 128, 2, 32), dtype, 0.5)
+    v = _arr((1, 128, 2, 32), dtype, 0.5)
+    got = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = ref.mha_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("b,s,h,kvh,dh,bk", [(2, 128, 4, 2, 32, 32),
+                                             (3, 256, 8, 8, 16, 128)])
+def test_decode_attention(b, s, h, kvh, dh, bk):
+    q = _arr((b, h, dh), scale=0.5)
+    k = _arr((b, s, kvh, dh), scale=0.5)
+    v = _arr((b, s, kvh, dh), scale=0.5)
+    kv_len = jnp.asarray(RNG.integers(1, s + 1, (b,)), jnp.int32)
+    got = decode_attention(q, k, v, kv_len, block_k=bk, interpret=True)
+    want = ref.decode_attention(q, k, v, kv_len)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_gat_aggregate_matches_stages():
+    from repro.core import stages
+    from repro.kernels import ops
+
+    n, k, h, dh = 60, 7, 4, 16
+    hsrc = _arr((n, h, dh))
+    nbr = jnp.asarray(RNG.integers(0, n, (n, k)), jnp.int32)
+    mask = jnp.asarray(RNG.random((n, k)) < 0.8, jnp.float32)
+    p = {"a_dst": _arr((h, dh), scale=0.2), "a_src": _arr((h, dh), scale=0.2)}
+    want = stages.gat_aggregate_padded(p, hsrc, hsrc, nbr, mask)
+    got = ops.gat_aggregate(p, hsrc, hsrc, nbr, mask, use_pallas=True,
+                            interpret=True)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)

@@ -1,0 +1,100 @@
+"""Subgraph Build properties (hypothesis): adjacency correctness vs brute
+force, padding invariants, instance sampling validity, sparsity monotonicity
+(the paper's Fig. 6a claim)."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metapath as mp
+from repro.core.hgraph import HeteroGraph, metapath_adjacency, sparsity
+
+
+def _rand_hg(seed, n1=12, n2=9, e1=20, e2=15):
+    rng = np.random.default_rng(seed)
+    a = sp.csr_matrix((np.ones(e1, np.float32),
+                       (rng.integers(0, n1, e1), rng.integers(0, n2, e1))),
+                      shape=(n1, n2))
+    counts = {"X": n1, "Y": n2}
+    feats = {"X": rng.standard_normal((n1, 4)).astype(np.float32),
+             "Y": rng.standard_normal((n2, 3)).astype(np.float32)}
+    return HeteroGraph(counts, feats,
+                       {("X", "xy", "Y"): a, ("Y", "yx", "X"): a.T.tocsr()},
+                       name="rand")
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_metapath_adjacency_matches_bruteforce(seed):
+    hg = _rand_hg(seed)
+    adj = metapath_adjacency(hg, ["X", "Y", "X"]).toarray()
+    a = hg.relations[("X", "xy", "Y")].toarray()
+    brute = ((a @ a.T) > 0).astype(np.float32)
+    np.testing.assert_array_equal(adj, brute)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), maxdeg=st.integers(1, 8))
+def test_padded_subgraph_invariants(seed, maxdeg):
+    hg = _rand_hg(seed)
+    sub = mp.build_padded(hg, ["X", "Y", "X"], max_degree=maxdeg)
+    assert sub.nbr.shape == sub.mask.shape == (12, maxdeg)
+    # every masked-in neighbor must be a true metapath neighbor (or self loop)
+    adj = metapath_adjacency(hg, ["X", "Y", "X"]).toarray() > 0
+    np.fill_diagonal(adj, True)  # self loops added
+    for u in range(12):
+        for j in range(maxdeg):
+            if sub.mask[u, j] > 0:
+                assert adj[u, sub.nbr[u, j]], (u, j)
+    # mask is a prefix (packed layout)
+    for u in range(12):
+        m = sub.mask[u]
+        assert (np.diff(m) <= 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_csr_edges_roundtrip(seed):
+    from repro.core.stages import csr_to_edges
+
+    hg = _rand_hg(seed)
+    csr = mp.build_csr(hg, ["X", "Y", "X"], add_self_loop=False)
+    seg, idx = csr_to_edges(csr.indptr, csr.indices)
+    adj = metapath_adjacency(hg, ["X", "Y", "X"]).toarray()
+    assert len(seg) == int(adj.sum())
+    for s, i in zip(seg, idx):
+        assert adj[s, i] > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), cap=st.integers(1, 6))
+def test_instance_enumeration_validity(seed, cap):
+    hg = _rand_hg(seed)
+    ib = mp.enumerate_instances(hg, ["X", "Y", "X"], max_instances=cap,
+                                max_fanout=4)
+    a = hg.relations[("X", "xy", "Y")].toarray() > 0
+    n, i, l = ib.nodes.shape
+    assert l == 3 and i == cap
+    for t in range(n):
+        for j in range(i):
+            if ib.mask[t, j] > 0:
+                x0, y, x1 = ib.nodes[t, j]
+                assert x0 == t
+                assert a[x0, y] and a[x1, y]
+
+
+def test_sparsity_decreases_with_metapath_length():
+    """Paper Fig. 6a: longer metapaths -> denser subgraphs."""
+    from repro.data.synthetic import make_dblp
+
+    hg = make_dblp()
+    s2 = sparsity(metapath_adjacency(hg, ["A", "P", "A"]))
+    s4 = sparsity(metapath_adjacency(hg, ["A", "P", "V", "P", "A"]))
+    assert s4 <= s2
+
+
+def test_stack_padded_shapes(tiny_hg):
+    subs = [mp.build_padded(tiny_hg, p, max_degree=8)
+            for p in (["M", "D", "M"], ["M", "A", "M"])]
+    nbr, mask = mp.stack_padded(subs)
+    assert nbr.shape == (2, 40, 8) and mask.shape == (2, 40, 8)

@@ -1,0 +1,151 @@
+"""Optimizers, schedules, grad accumulation, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import (
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    warmup_cosine,
+)
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def _quadratic_params():
+    return {"w": jnp.asarray([3.0, -2.0, 1.0]), "b": jnp.asarray([[0.5, -0.5]])}
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adamw(lambda s: 0.05, weight_decay=0.0),
+    lambda: adafactor(lambda s: 0.5),
+])
+def test_optimizer_minimizes_quadratic(make_opt):
+    opt = make_opt()
+    params = _quadratic_params()
+    state = opt.init(params)
+
+    def loss(p):
+        return sum((x ** 2).sum() for x in jax.tree.leaves(p))
+
+    for i in range(120):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.int32(i))
+    assert float(loss(params)) < 0.05 * float(loss(_quadratic_params()))
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1e-3, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) < float(lr(jnp.int32(9)))
+    assert abs(float(lr(jnp.int32(10))) - 1e-3) < 2e-4
+    assert float(lr(jnp.int32(99))) < float(lr(jnp.int32(50)))
+    assert float(lr(jnp.int32(99))) >= 0.099e-3  # floor
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((4,)) * 10.0, "b": jnp.ones((2, 2)) * 10.0}
+    clipped, gn = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+    assert float(gn) > 1.0
+    small = {"a": jnp.ones((4,)) * 0.01}
+    out, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(out["a"], small["a"], rtol=1e-6)
+
+
+def test_microbatch_accumulation_matches_full_batch(tiny_cfg_base):
+    from repro.train.optimizer import build_optimizer
+
+    cfg = ModelConfig(name="d", family="dense", **tiny_cfg_base)
+    opt = build_optimizer(cfg, total_steps=10)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    s1 = init_train_state(jax.random.key(0), cfg, opt)
+    s2 = init_train_state(jax.random.key(0), cfg, opt)
+    s1, m1 = make_train_step(cfg, opt, n_microbatches=1)(s1, batch)
+    s2, m2 = make_train_step(cfg, opt, n_microbatches=2)(s2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-3
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_checkpoint_roundtrip(tmp_path, tiny_cfg_base):
+    from repro.train.optimizer import build_optimizer
+
+    cfg = ModelConfig(name="d", family="dense", **tiny_cfg_base)
+    opt = build_optimizer(cfg)
+    state = init_train_state(jax.random.key(0), cfg, opt)
+    d = str(tmp_path / "ck")
+    ckpt.save(state, d, step=7)
+    assert ckpt.latest_step(d) == 7
+    like = jax.eval_shape(lambda: init_train_state(jax.random.key(0), cfg, opt))
+    restored = ckpt.restore(d, like)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_and_corruption_detected(tmp_path, tiny_cfg_base):
+    from repro.train.optimizer import build_optimizer
+
+    cfg = ModelConfig(name="d", family="dense", **tiny_cfg_base)
+    opt = build_optimizer(cfg)
+    state = init_train_state(jax.random.key(0), cfg, opt)
+    d = str(tmp_path / "ck")
+    path = ckpt.save(state, d, step=1)
+    assert not os.path.exists(path + ".tmp")
+    # corrupt the shard -> restore must fail loudly
+    shard = os.path.join(path, "shard_00000.npz")
+    with open(shard, "r+b") as f:
+        f.seek(100)
+        f.write(b"\xde\xad\xbe\xef")
+    with pytest.raises(IOError):
+        ckpt.restore(d, state)
+
+
+def test_async_checkpointer(tmp_path, tiny_cfg_base):
+    from repro.train.optimizer import build_optimizer
+
+    cfg = ModelConfig(name="d", family="dense", **tiny_cfg_base)
+    opt = build_optimizer(cfg)
+    state = init_train_state(jax.random.key(0), cfg, opt)
+    d = str(tmp_path / "ck")
+    saver = ckpt.AsyncCheckpointer(d)
+    saver.submit(state, 1)
+    saver.submit(state, 2)
+    saver.close()
+    assert ckpt.latest_step(d) in (1, 2)  # 1 may be dropped by the 1-deep queue
+    restored = ckpt.restore(d, state)
+    np.testing.assert_array_equal(np.asarray(jax.tree.leaves(restored)[0]),
+                                  np.asarray(jax.tree.leaves(state)[0]))
+
+
+def test_data_shard_determinism():
+    from repro.train.elastic import data_shard
+
+    a = data_shard(step=12, host_id=3, n_hosts=8, global_batch=256,
+                   dataset_size=10_000)
+    b = data_shard(step=12, host_id=3, n_hosts=8, global_batch=256,
+                   dataset_size=10_000)
+    assert a == b
+    ranges = [data_shard(5, h, 4, 64, 10_000) for h in range(4)]
+    # disjoint per-host ranges covering the global batch
+    starts = sorted(r[0] for r in ranges)
+    assert len(set(starts)) == 4
+    for s, e in ranges:
+        assert e - s == 16
+
+
+def test_step_timer_flags_stragglers():
+    from repro.train.elastic import StepTimer
+
+    t = StepTimer(threshold=3.0)
+    for _ in range(10):
+        assert not t.observe(1.0)
+    assert t.observe(10.0)
