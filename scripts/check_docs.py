@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""Docs check: every repo path referenced in README.md / docs/ARCHITECTURE.md
+must exist (CI fails when docs drift from the tree).
+
+A "path reference" is any backtick-quoted or code-block token that looks like
+a repo-relative file or directory (contains a '/' or a known suffix and no
+spaces). Command words, flags and URLs are ignored.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ["README.md", "docs/ARCHITECTURE.md"]
+
+# `...`-quoted tokens; inside them, path-looking pieces
+INLINE = re.compile(r"`([^`\n]+)`")
+PATHISH = re.compile(r"^[\w./{},-]+$")
+SKIP_PREFIXES = ("http", "--", "-m", "python", "PYTHONPATH", "XLA_FLAGS")
+
+
+def expand_braces(tok: str):
+    """src/a/{b,c}.py -> src/a/b.py, src/a/c.py (one brace group)."""
+    m = re.search(r"\{([^{}]*)\}", tok)
+    if not m:
+        return [tok]
+    out = []
+    for part in m.group(1).split(","):
+        out.extend(expand_braces(tok[: m.start()] + part.strip() + tok[m.end():]))
+    return out
+
+
+def candidate_paths(text: str):
+    for tok in INLINE.findall(text):
+        tok = tok.strip().rstrip(".,;:")
+        if not PATHISH.match(tok) or tok.startswith(SKIP_PREFIXES):
+            continue
+        if "/" not in tok and not tok.endswith((".py", ".md", ".yml", ".sh")):
+            continue
+        if tok.endswith("()"):  # function refs aren't files
+            continue
+        yield from expand_braces(tok)
+
+
+def main() -> int:
+    missing = []
+    for doc in DOCS:
+        path = ROOT / doc
+        if not path.exists():
+            missing.append((doc, "<the doc itself>"))
+            continue
+        for tok in candidate_paths(path.read_text()):
+            # docs may refer to files repo-relative ("src/repro/nn/mlp.py"),
+            # src-relative ("repro/dist") or package-relative ("nn/mlp.py");
+            # a bare filename ("segment_spmm.py") matches anywhere in-tree
+            roots = (ROOT, ROOT / "src", ROOT / "src" / "repro")
+            if any((r / tok).exists() for r in roots):
+                continue
+            if "/" not in tok and any(ROOT.rglob(tok)):
+                continue
+            missing.append((doc, tok))
+    if missing:
+        for doc, tok in missing:
+            print(f"MISSING  {doc}: {tok}")
+        return 1
+    print(f"docs check OK ({', '.join(DOCS)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -78,7 +78,8 @@ class HAN:
 
     # ---------------- Stage 2: Feature Projection ----------------
     def fp(self, params: Dict, batch: Dict) -> jax.Array:
-        h = stages.feature_projection(params["fp"], batch["feats"])
+        # stage-aware sharded FP (DM-Type): no-op off-mesh
+        h = stages.feature_projection_sharded(params["fp"], batch["feats"])
         ht = h[self.target]
         n = ht.shape[0]
         return ht.reshape(n, self.cfg.n_heads, -1)  # [N, H, Dh]
@@ -87,22 +88,15 @@ class HAN:
     def na(self, params: Dict, batch: Dict, h: jax.Array):
         cfg = self.cfg
         if cfg.fused:
+            agg_fn = None
             if cfg.use_pallas:
                 from repro.kernels import ops as kops
 
-                agg = jax.vmap(
-                    lambda p, nbr, mask: kops.gat_aggregate(
-                        p, h, h, nbr, mask, use_pallas=True
-                    ),
-                    in_axes=(0, 0, 0),
-                )
-            else:
-                agg = jax.vmap(
-                    lambda p, nbr, mask: stages.gat_aggregate_padded(p, h, h, nbr, mask),
-                    in_axes=(0, 0, 0),
-                )
-            z = agg(params["gat"], batch["nbr"], batch["mask"])  # [P, N, H, Dh]
-            z = jax.nn.elu(z)
+                agg_fn = lambda p, hd, hs, nbr, mask: kops.gat_aggregate(
+                    p, hd, hs, nbr, mask, use_pallas=True)
+            z = stages.gat_aggregate_padded_stacked(
+                params["gat"], h, batch["nbr"], batch["mask"], agg_fn=agg_fn)
+            z = jax.nn.elu(z)  # [P, N, H, Dh]
             return z.reshape(z.shape[0], z.shape[1], -1)  # [P, N, D]
         # baseline: independent kernels per subgraph (the paper's Fig. 5c timeline)
         outs: List[jax.Array] = []
@@ -114,6 +108,8 @@ class HAN:
     # ---------------- Stage 4: Semantic Aggregation ----------------
     def sa(self, params: Dict, batch: Dict, z) -> jax.Array:
         if self.cfg.fused:
+            # SA rides the NA layout: [P, N, D] with nodes over BATCH
+            z = stages.shard(z, *stages.HGNN_STAGE_SPECS["sa_stacked"])
             return semantics.semantic_attention(params["sem"], z)
         return semantics.semantic_attention_list(params["sem"], z)
 

@@ -84,7 +84,8 @@ class RGCN:
 
     # ---------------- Stage 2: Feature Projection ----------------
     def fp(self, params: Dict, batch: Dict) -> Dict[str, jax.Array]:
-        return stages.feature_projection(params["fp"], batch["feats"])
+        # stage-aware sharded FP (DM-Type): no-op off-mesh
+        return stages.feature_projection_sharded(params["fp"], batch["feats"])
 
     # ---------------- Stage 3: Neighbor Aggregation (mean, per relation) ----
     def na(self, params: Dict, batch: Dict, h: Dict[str, jax.Array]):
@@ -95,7 +96,8 @@ class RGCN:
             s, r, d = key
             a, b = batch["rels"][key]
             if self.cfg.fused:
-                agg = stages.mean_aggregate_padded(h[s], a, b)
+                # stage-aware sharded NA (no-op off-mesh)
+                agg = stages.mean_aggregate_padded_sharded(h[s], a, b)
             else:
                 agg = stages.mean_aggregate_csr(h[s], a, b, batch["counts"][d])
             out["|".join(key)] = agg @ params["w_rel"][key]

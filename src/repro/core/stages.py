@@ -19,11 +19,31 @@ All functions are pure and jit-able; parameters are plain dict pytrees.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.dist.sharding import BATCH, MODEL, shard
+
+# Stage-aware partitioning strategy (the paper's taxonomy drives the specs):
+#   FP  (DM-Type dense matmul)      -> hidden dim over MODEL, nodes over BATCH
+#   NA  (TB-Type irregular gather)  -> destination nodes over BATCH; the
+#                                      source pool replicated (arbitrary
+#                                      gathers cannot stay sharded)
+#   SA  (EW-Type elementwise+reduce)-> rides the NA layout, nodes over BATCH
+# Every entry is a logical per-dim spec resolved by repro.dist.resolve_spec.
+HGNN_STAGE_SPECS: Dict[str, Tuple] = {
+    "fp_weight": (None, MODEL),          # [F_t, hidden]
+    "fp_out": (BATCH, MODEL),            # [N_t, hidden]
+    "na_dst": (BATCH, None, None),       # [N, H, Dh]
+    "na_src": (None, None, None),        # [M, H, Dh] replicated gather pool
+    "na_nbr": (BATCH, None),             # [N, K]
+    "na_out": (BATCH, None, None),       # [N, H, Dh]
+    "sa_stacked": (None, BATCH, None),   # [P, N, D]
+}
+
 
 # ---------------------------------------------------------------------------
 # Stage 2: Feature Projection
@@ -45,6 +65,19 @@ def feature_projection(
 ) -> Dict[str, jax.Array]:
     """Project per-type raw features into the shared latent space (DM-Type)."""
     return {t: feats[t] @ params[t] for t in feats}
+
+
+def feature_projection_sharded(
+    params: Dict[str, jax.Array], feats: Dict[str, jax.Array]
+) -> Dict[str, jax.Array]:
+    """FP with the stage-aware partitioning: the dense DM-Type matmul is the
+    one HGNN stage that shards like an LM layer — weights column-sharded over
+    'model', per-type node rows over the batch axes.  No-op off-mesh."""
+    return {
+        t: shard(feats[t] @ shard(params[t], *HGNN_STAGE_SPECS["fp_weight"]),
+                 *HGNN_STAGE_SPECS["fp_out"])
+        for t in feats
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -105,12 +138,61 @@ def gat_aggregate_csr(
     return jax.ops.segment_sum(msg, seg, num_segments=n_nodes)  # SpMM
 
 
+def gat_aggregate_padded_sharded(
+    p: Dict[str, jax.Array],
+    h_dst: jax.Array,
+    h_src: jax.Array,
+    nbr: jax.Array,
+    mask: jax.Array,
+) -> jax.Array:
+    """Padded NA with the stage-aware partitioning: destination nodes (and
+    their neighbor lists) shard over BATCH; the source pool is replicated so
+    the TB-Type gather stays local.  No-op off-mesh."""
+    h_dst = shard(h_dst, *HGNN_STAGE_SPECS["na_dst"])
+    h_src = shard(h_src, *HGNN_STAGE_SPECS["na_src"])
+    nbr = shard(nbr, *HGNN_STAGE_SPECS["na_nbr"])
+    mask = shard(mask, *HGNN_STAGE_SPECS["na_nbr"])
+    out = gat_aggregate_padded(p, h_dst, h_src, nbr, mask)
+    return shard(out, *HGNN_STAGE_SPECS["na_out"])
+
+
+def gat_aggregate_padded_stacked(
+    p_stacked: Dict[str, jax.Array],
+    h: jax.Array,
+    nbr: jax.Array,  # [P, N, K] stacked per-metapath subgraphs
+    mask: jax.Array,
+    agg_fn: Optional[Callable] = None,
+) -> jax.Array:
+    """Inter-subgraph-parallel NA over stacked padded subgraphs with the
+    stage-aware sharding applied at the stacked level (constraints sit
+    outside the vmap): destination nodes over BATCH, source pool replicated,
+    metapath dim unsharded.  ``agg_fn`` swaps in the Pallas kernel path."""
+    base = agg_fn or gat_aggregate_padded
+    h_src = shard(h, *HGNN_STAGE_SPECS["na_src"])
+    nbr = shard(nbr, None, *HGNN_STAGE_SPECS["na_nbr"])
+    mask = shard(mask, None, *HGNN_STAGE_SPECS["na_nbr"])
+    z = jax.vmap(lambda pp, nn, mm: base(pp, h, h_src, nn, mm),
+                 in_axes=(0, 0, 0))(p_stacked, nbr, mask)
+    return shard(z, None, *HGNN_STAGE_SPECS["na_out"])
+
+
 def mean_aggregate_padded(h_src: jax.Array, nbr: jax.Array, mask: jax.Array) -> jax.Array:
     """Mean NA (RGCN). h_src [M, D] -> [N, D]."""
     hn = h_src[nbr]  # [N, K, D]
     s = (hn * mask[..., None]).sum(axis=1)
     d = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
     return s / d
+
+
+def mean_aggregate_padded_sharded(
+    h_src: jax.Array, nbr: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Mean NA (RGCN) with stage-aware sharding: destinations over BATCH,
+    source pool replicated.  No-op off-mesh."""
+    h_src = shard(h_src, None, None)
+    nbr = shard(nbr, *HGNN_STAGE_SPECS["na_nbr"])
+    mask = shard(mask, *HGNN_STAGE_SPECS["na_nbr"])
+    return shard(mean_aggregate_padded(h_src, nbr, mask), BATCH, None)
 
 
 def mean_aggregate_csr(

@@ -1,0 +1,23 @@
+"""Distributed runtime: mesh axis conventions, sharding constraints and
+parameter partitioning.
+
+Two modules:
+
+* :mod:`repro.dist.sharding`       — axis-name constants (``BATCH``/``MODEL``),
+  the ``shard`` constraint helper, the ``use_mesh`` context manager and the
+  ``resolve_spec`` resolve-or-replicate spec resolver.
+* :mod:`repro.dist.param_sharding` — ``param_specs``: walk a parameter pytree
+  and assign a ``NamedSharding`` per leaf (TP over 'model', optional FSDP
+  over 'data', EP for expert weights, replication for small vectors).
+"""
+from repro.dist.sharding import (  # noqa: F401
+    BATCH,
+    DATA,
+    MODEL,
+    POD,
+    current_mesh,
+    resolve_spec,
+    shard,
+    use_mesh,
+)
+from repro.dist.param_sharding import param_specs  # noqa: F401

@@ -1,0 +1,92 @@
+"""Parameter partitioning: pytree -> matching NamedSharding pytree.
+
+``param_specs`` walks a parameter pytree by *key path* and assigns each leaf
+a :class:`jax.sharding.NamedSharding` built from the repo's logical axes
+(see :mod:`repro.dist.sharding` for the resolve-or-replicate contract):
+
+* **DM-Type projection matrices** (the dense Feature-Projection analogue:
+  ``wq/wk/wv``, MLP ``w_gate/w_up``, Mamba2 ``w_z/w_x/w_dt``, ``lm_head``)
+  are column-sharded — output dim over ``'model'`` (Megatron layout).
+* **Row-sharded contractions** (``wo``, ``w_down``, Mamba2 ``out_proj``)
+  shard the input dim over ``'model'`` so each block ends in exactly one
+  all-reduce.
+* **Expert weights** (a leaf named ``w_gate/w_up/w_down`` whose immediate
+  parent is ``'moe'``) shard the *expert* dim over ``'model'`` (expert
+  parallelism matching the ``shard(xe, None, MODEL, ...)`` dispatch buffer).
+* **Embeddings** shard vocab over ``'model'`` (logits come out
+  vocab-sharded) and, under FSDP, d_model over ``'data'``.
+* **Small EW-Type vectors** (norm scales, biases, attention vectors
+  ``a_dst/a_src``, SSM ``A_log/D/dt_bias``, conv taps, routers) are
+  replicated — their all-gather would cost more than their bytes.
+
+FSDP (ZeRO-3) additionally shards one non-model dim of every large matrix
+over ``'data'`` (``fsdp=`` for dense weights, ``fsdp_experts=`` for expert
+weights).  Every rule goes through ``resolve_spec``, so a dim that does not
+divide the axis simply stays replicated — the same table serves reduced CPU
+configs and the production mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.tree_util import DictKey, tree_map_with_path
+
+from repro.dist.sharding import DATA, MODEL, resolve_spec
+
+# Column-sharded: output (last) dim over 'model'.
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_z", "w_x", "w_dt", "lm_head"}
+# Row-sharded: input (second-to-last) dim over 'model'.
+_ROW = {"wo", "w_down", "out_proj"}
+# Expert-parallel leaves when the enclosing block is a 'moe' dict.
+_EXPERT = {"w_gate", "w_up", "w_down"}
+
+
+def _dict_keys(path: Tuple[Any, ...]) -> Tuple[str, ...]:
+    return tuple(k.key for k in path if isinstance(k, DictKey))
+
+
+def _leaf_spec(path, leaf, fsdp: bool, fsdp_experts: bool):
+    """Logical per-dim spec for one leaf (before mesh resolution).
+
+    Works on trailing dims so the same rule covers a bare block ([d, f]),
+    a scan-stacked run ([L, d, f]) and stacked expert weights ([L, E, d, f]).
+    """
+    names = _dict_keys(path)
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    nd = leaf.ndim
+    spec = [None] * nd
+
+    if name == "embed" and nd == 2:
+        spec[0] = MODEL
+        if fsdp:
+            spec[1] = DATA
+    elif parent == "moe" and name in _EXPERT and nd >= 3:
+        spec[-3] = MODEL  # expert dim
+        if fsdp_experts:
+            spec[-2] = DATA
+    elif name in _COL and nd >= 2:
+        spec[-1] = MODEL
+        if fsdp:
+            spec[-2] = DATA
+    elif name in _ROW and nd >= 2:
+        spec[-2] = MODEL
+        if fsdp:
+            spec[-1] = DATA
+    # everything else (norms, biases, attention/SSM vectors, routers, conv
+    # taps, HGNN attention vectors) stays fully replicated
+    return tuple(spec)
+
+
+def param_specs(params: Any, mesh: Mesh, fsdp: bool = True,
+                fsdp_experts: bool = True) -> Any:
+    """NamedSharding pytree matching ``params`` (leaves may be concrete
+    arrays or ``ShapeDtypeStruct``s from ``jax.eval_shape``)."""
+
+    def one(path, leaf):
+        spec = _leaf_spec(path, leaf, fsdp, fsdp_experts)
+        return NamedSharding(mesh, resolve_spec(leaf.shape, spec, mesh))
+
+    return tree_map_with_path(one, params)

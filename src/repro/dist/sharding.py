@@ -1,0 +1,128 @@
+"""Axis-name conventions and the resolve-or-replicate sharding contract.
+
+Axis-name conventions
+---------------------
+Every mesh in this repo is built from (a subset of) three named axes:
+
+* ``"pod"``   — pure data parallelism across slices; the only cross-pod
+  collective a step is allowed to need is the gradient all-reduce.
+* ``"data"``  — data parallelism within a pod; also the FSDP (ZeRO-3) axis
+  for parameter/optimizer-state sharding.
+* ``"model"`` — tensor/expert parallelism within a pod.
+
+Layer code never names mesh axes directly; it uses the two *logical* axis
+constants exported here:
+
+* ``BATCH = ("pod", "data")`` — batch-like dims (tokens, destination nodes in
+  the HGNN Neighbor Aggregation stage) shard over every data-parallel axis
+  that exists on the current mesh.
+* ``MODEL = "model"``         — hidden/head/expert/vocab dims.
+
+The resolve-or-replicate contract
+---------------------------------
+``resolve_spec(shape, spec, mesh)`` turns a logical per-dim spec into a
+concrete :class:`jax.sharding.PartitionSpec` for *this* mesh, degrading
+gracefully instead of erroring:
+
+1. Mesh axes named in the spec but absent from ``mesh.axis_names`` are
+   dropped (a smoke mesh has no ``"pod"`` axis; ``BATCH`` resolves to just
+   ``"data"``).
+2. If the dimension size is not divisible by the product of the surviving
+   axis sizes, that dim falls back to replication (``None``).  This is what
+   lets one spec table serve both the 256-chip production mesh and a 2x4
+   host-platform test mesh: a 15-wide dim on a ``model=4`` mesh simply stays
+   replicated rather than triggering a GSPMD error.
+3. An empty spec (or spec entries beyond ``len(shape)``) mean "replicated".
+
+``shard(x, *spec)`` applies the resolved spec as a
+``with_sharding_constraint`` against the mesh installed by ``use_mesh``; with
+no active mesh it is a no-op, so single-device code paths (unit tests, the
+plain ``jax.jit`` in ``repro.launch.train``) run the exact same layer code.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis names (see module docstring).
+POD = "pod"
+DATA = "data"
+MODEL = "model"
+BATCH = (POD, DATA)
+
+# Stack, not a single slot: build_step nests (dry-run builds a step while a
+# surrounding launcher mesh is active).  Tracing is single-threaded.
+_MESH_STACK: List[Mesh] = []
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The innermost mesh installed by :func:`use_mesh` (None outside)."""
+    return _MESH_STACK[-1] if _MESH_STACK else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    """Install ``mesh`` as the target of :func:`shard` constraints.
+
+    Used around step-function *tracing* (see ``repro.launch.steps``): the
+    constraints captured in the jaxpr then name this mesh's axes.
+    """
+    _MESH_STACK.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def _flatten_axes(entry: Any) -> Tuple[str, ...]:
+    """Flatten a spec entry (name | nested tuples/lists of names) to names."""
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    out: List[str] = []
+    for e in entry:
+        out.extend(_flatten_axes(e))
+    return tuple(out)
+
+
+def resolve_spec(shape: Sequence[int], spec: Sequence[Any], mesh: Mesh) -> P:
+    """Resolve a logical per-dim spec against ``mesh`` (see module docstring).
+
+    ``spec`` entries may be ``None``, a mesh-axis name, or an (arbitrarily
+    nested) tuple of axis names.  Returns a ``PartitionSpec`` with exactly
+    ``min(len(spec), len(shape))`` entries; single-axis tuples collapse to
+    the bare name so results compare equal to hand-written specs.
+    """
+    # mesh.shape is {axis_name: size}; duck-typed so tests can resolve
+    # against an abstract mesh description without real devices
+    axis_sizes = dict(mesh.shape)
+    out: List[Any] = []
+    for dim, entry in zip(shape, spec):
+        names = [n for n in _flatten_axes(entry) if n in axis_sizes]
+        if not names:
+            out.append(None)
+            continue
+        total = 1
+        for n in names:
+            total *= axis_sizes[n]
+        if int(dim) % total != 0:  # divisibility guard -> replicate this dim
+            out.append(None)
+        elif len(names) == 1:
+            out.append(names[0])
+        else:
+            out.append(tuple(names))
+    return P(*out)
+
+
+def shard(x: jax.Array, *spec: Any) -> jax.Array:
+    """Constrain ``x`` to the resolved spec on the active mesh (no-op
+    without one).  ``spec`` is one logical entry per dim of ``x``."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve_spec(x.shape, spec, mesh)))

@@ -1,19 +1,131 @@
-"""Serving launcher: batched generation with the slot engine.
+"""Serving launchers: LM batched generation + stage-aware sharded HGNN inference.
+
+LM slot engine:
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
       --requests 8 --max-tokens 16
+
+HGNN inference (the paper's workloads, partitioned by stage taxonomy):
+
+  PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.serve --hgnn han --dataset imdb \
+      --mesh-data 2 --mesh-model 4
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Any, NamedTuple, Optional
 
 import jax
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
 
 from repro.configs import get_config, get_reduced
+from repro.configs.base import HGNNConfig
+from repro.dist.sharding import resolve_spec, use_mesh
 from repro.nn.transformer import init_lm_params
 from repro.serve.engine import Request, ServeEngine
+
+
+# ---------------------------------------------------------------------------
+# stage-aware sharded HGNN inference
+# ---------------------------------------------------------------------------
+
+
+class BuiltHGNNInfer(NamedTuple):
+    fn: Any      # jitted (params, batch) -> logits
+    params: Any  # device_put with stage-aware shardings (if mesh given)
+    batch: Any
+
+
+def hgnn_shardings(params: Any, batch: Any, mesh: Mesh):
+    """Stage-aware NamedShardings for fused-path HGNN inference inputs.
+
+    Follows ``repro.core.stages.HGNN_STAGE_SPECS``: FP projection matrices
+    column-sharded over 'model' (DM-Type), padded neighbor tables sharded
+    over destination nodes on the batch axes (TB-Type), everything small
+    (attention vectors, classifier, features pool) replicated.
+    """
+    from repro.core.stages import HGNN_STAGE_SPECS
+
+    rep = NamedSharding(mesh, P())
+
+    def named(shape, logical):
+        return NamedSharding(mesh, resolve_spec(shape, logical, mesh))
+
+    def param_sh(path, leaf):
+        keys = [k.key for k in path if isinstance(k, DictKey)]
+        if "fp" in keys and getattr(leaf, "ndim", 0) == 2:
+            return named(leaf.shape, HGNN_STAGE_SPECS["fp_weight"])
+        return rep
+
+    def batch_sh(path, leaf):
+        keys = [k.key for k in path if isinstance(k, DictKey)]
+        nd = getattr(leaf, "ndim", 0)
+        if keys and keys[-1] in ("nbr", "mask") and nd == 3:  # HAN [P,N,K]
+            return named(leaf.shape, (None,) + HGNN_STAGE_SPECS["na_nbr"])
+        if "rels" in keys and nd == 2:  # RGCN per-relation (nbr, mask)
+            return named(leaf.shape, HGNN_STAGE_SPECS["na_nbr"])
+        return rep
+
+    return tree_map_with_path(param_sh, params), tree_map_with_path(batch_sh, batch)
+
+
+def build_hgnn_infer(cfg: HGNNConfig, hg, mesh: Optional[Mesh] = None,
+                     rng: Optional[jax.Array] = None) -> BuiltHGNNInfer:
+    """Stage-aware sharded HGNN inference entry point.
+
+    The paper's finding — FP is dense DM-Type, NA is irregular TB-Type, SA is
+    EW-Type — becomes the partitioning strategy: FP shards its projection
+    matmul over 'model', padded NA shards destination nodes over the batch
+    axes with a replicated source pool, SA needs no resharding.  With
+    ``mesh=None`` this is the plain single-device path (identical math).
+    ``cfg.fused=True`` is required: only the padded/stacked NA layout shards.
+    """
+    from repro.core.models import get_model
+
+    if mesh is not None and not cfg.fused:
+        raise ValueError("sharded HGNN inference needs cfg.fused=True "
+                         "(padded NA layout)")
+    model = get_model(cfg)
+    batch = model.prepare(hg)
+    params = model.init(rng if rng is not None else jax.random.key(cfg.seed),
+                        batch)
+
+    if mesh is None:
+        return BuiltHGNNInfer(jax.jit(model.forward), params, batch)
+
+    def fn(p, b):
+        with use_mesh(mesh):
+            return model.forward(p, b)
+
+    p_sh, b_sh = hgnn_shardings(params, batch, mesh)
+    params = jax.device_put(params, p_sh)
+    batch = jax.device_put(batch, b_sh)
+    return BuiltHGNNInfer(jax.jit(fn), params, batch)
+
+
+def run_hgnn(args) -> None:
+    from repro.data.synthetic import make_dataset
+    from repro.launch.mesh import make_smoke_mesh
+
+    cfg = HGNNConfig(model=args.hgnn, dataset=args.dataset, fused=True)
+    hg = make_dataset(args.dataset)
+    mesh = None
+    if args.mesh_data * args.mesh_model > 1:
+        mesh = make_smoke_mesh(data=args.mesh_data, model=args.mesh_model)
+    built = build_hgnn_infer(cfg, hg, mesh)
+    logits = jax.block_until_ready(built.fn(built.params, built.batch))
+    t0 = time.time()
+    for _ in range(args.iters):
+        logits = jax.block_until_ready(built.fn(built.params, built.batch))
+    dt = (time.time() - t0) / max(args.iters, 1)
+    mesh_desc = (f"{dict(zip(mesh.axis_names, mesh.devices.shape))}"
+                 if mesh else "single-device")
+    print(f"{cfg.model}/{cfg.dataset} logits {logits.shape} on {mesh_desc}: "
+          f"{dt*1e3:.2f} ms/iter")
 
 
 def main() -> None:
@@ -25,7 +137,19 @@ def main() -> None:
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--slots", type=int, default=4)
+    # HGNN inference mode (stage-aware sharded; see run_hgnn)
+    ap.add_argument("--hgnn", default=None, choices=["han", "rgcn"],
+                    help="serve an HGNN model instead of an LM")
+    ap.add_argument("--dataset", default="imdb",
+                    choices=["imdb", "acm", "dblp", "reddit"])
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--iters", type=int, default=3)
     args = ap.parse_args()
+
+    if args.hgnn:
+        run_hgnn(args)
+        return
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     if cfg.family == "encdec":

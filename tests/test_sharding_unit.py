@@ -1,0 +1,253 @@
+"""Unit tests for repro.dist — single-device, no subprocess harness.
+
+Covers the resolve-or-replicate contract edge cases (empty specs, nested
+axis tuples, 1-sized mesh axes, divisibility fallback) and ``param_specs``
+over every registered model family, plus the stage-aware sharded HGNN
+inference entry point off-mesh.
+"""
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, tree_leaves_with_path, tree_structure
+
+from repro.configs import get_reduced, list_archs
+from repro.dist.param_sharding import param_specs
+from repro.dist.sharding import (
+    BATCH,
+    MODEL,
+    current_mesh,
+    resolve_spec,
+    shard,
+    use_mesh,
+)
+
+
+class FakeMesh(NamedTuple):
+    """Just enough mesh surface for resolve_spec (axis_names + shape)."""
+
+    axis_names: tuple
+    shape: dict
+
+
+MESH_2x4 = FakeMesh(("data", "model"), {"data": 2, "model": 4})
+
+
+def _unit_mesh() -> Mesh:
+    """Real 1-device mesh with 1-sized data/model axes."""
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# resolve_spec
+# ---------------------------------------------------------------------------
+
+
+def test_empty_spec_replicates():
+    assert resolve_spec((8, 16), (), MESH_2x4) == P()
+
+
+def test_spec_shorter_than_shape():
+    assert resolve_spec((8, 16, 32), ("data",), MESH_2x4) == P("data")
+
+
+def test_spec_longer_than_shape_truncates():
+    assert resolve_spec((8,), ("data", "model"), MESH_2x4) == P("data")
+
+
+def test_divisibility_guard_replicates():
+    assert resolve_spec((8, 15), (None, "model"), MESH_2x4) == P(None, None)
+    assert resolve_spec((7, 16), ("data", "model"), MESH_2x4) == P(None, "model")
+
+
+def test_unknown_axis_dropped():
+    assert resolve_spec((8, 16), (("pod", "data"), None), MESH_2x4) == P("data", None)
+    assert resolve_spec((8,), ("pod",), MESH_2x4) == P(None)
+
+
+def test_nested_axis_tuples_flatten():
+    spec = resolve_spec((16,), ((("pod", "data"), "model"),), MESH_2x4)
+    assert spec == P(("data", "model"))
+
+
+def test_tuple_divisibility_uses_product():
+    # 8 % (2*4) == 0 -> sharded over both; 12 % 8 != 0 -> replicated
+    assert resolve_spec((8,), (("data", "model"),), MESH_2x4) == P(("data", "model"))
+    assert resolve_spec((12,), (("data", "model"),), MESH_2x4) == P(None)
+
+
+def test_one_sized_mesh_axes_retained():
+    unit = FakeMesh(("data", "model"), {"data": 1, "model": 1})
+    # size-1 axes divide everything; the (legal) axis name is kept
+    assert resolve_spec((7, 13), ("data", "model"), unit) == P("data", "model")
+    assert resolve_spec((7,), (BATCH,), unit) == P("data")
+
+
+def test_single_axis_tuple_collapses_to_name():
+    # result must compare equal to a hand-written P('data', ...)
+    spec = resolve_spec((8, 16), (BATCH, MODEL), MESH_2x4)
+    assert spec == P("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# shard / use_mesh
+# ---------------------------------------------------------------------------
+
+
+def test_shard_is_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert current_mesh() is None
+    assert shard(x, BATCH, MODEL) is x
+
+
+def test_use_mesh_nests_and_restores():
+    m = _unit_mesh()
+    with use_mesh(m) as m1:
+        assert current_mesh() is m1
+        with use_mesh(m):
+            assert current_mesh() is m
+        assert current_mesh() is m1
+    assert current_mesh() is None
+
+
+def test_shard_applies_constraint_under_mesh():
+    m = _unit_mesh()
+    with use_mesh(m):
+        y = shard(jnp.ones((4, 8)), BATCH, MODEL)
+    assert y.shape == (4, 8)
+    np.testing.assert_array_equal(np.asarray(y), np.ones((4, 8)))
+
+
+# ---------------------------------------------------------------------------
+# param_specs on every registered model family
+# ---------------------------------------------------------------------------
+
+
+def _abstract_params(cfg):
+    if cfg.family == "encdec":
+        from repro.nn.encdec import init_encdec_params
+
+        return jax.eval_shape(lambda: init_encdec_params(jax.random.key(0), cfg))
+    from repro.nn.transformer import init_lm_params
+
+    return jax.eval_shape(lambda: init_lm_params(jax.random.key(0), cfg))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_every_family(arch):
+    cfg = get_reduced(arch)
+    params = _abstract_params(cfg)
+    mesh = _unit_mesh()
+    sh = param_specs(params, mesh, fsdp=cfg.fsdp, fsdp_experts=cfg.fsdp_experts)
+    assert tree_structure(sh) == tree_structure(params)
+
+    flat_p = dict(tree_leaves_with_path(params))
+    for path, ns in tree_leaves_with_path(sh):
+        assert isinstance(ns, NamedSharding)
+        leaf = flat_p[path]
+        assert len(ns.spec) in (0, leaf.ndim)
+        names = [k.key for k in path if isinstance(k, DictKey)]
+        name, parent = names[-1], (names[-2] if len(names) >= 2 else "")
+        spec = tuple(ns.spec) + (None,) * (leaf.ndim - len(ns.spec))
+        if parent == "moe" and name in ("w_gate", "w_up", "w_down"):
+            assert spec[-3] == "model", (path, spec)  # expert parallelism
+        elif name in ("wq", "wk", "wv", "w_gate", "w_up", "w_z", "w_x",
+                      "w_dt", "lm_head"):
+            assert spec[-1] == "model", (path, spec)  # column-sharded
+        elif name in ("wo", "w_down", "out_proj"):
+            assert spec[-2] == "model", (path, spec)  # row-sharded
+        elif name == "embed":
+            assert spec[0] == "model", (path, spec)  # vocab-sharded logits
+        elif leaf.ndim <= 1:
+            # small EW-Type vectors (norm scales, biases, A_log/D) replicate
+            assert all(s is None for s in spec), (path, spec)
+
+
+def test_param_specs_no_fsdp_drops_data_axis():
+    cfg = get_reduced("granite-8b")
+    params = _abstract_params(cfg)
+    sh = param_specs(params, _unit_mesh(), fsdp=False, fsdp_experts=False)
+    for _, ns in tree_leaves_with_path(sh):
+        assert "data" not in jax.tree_util.tree_leaves(tuple(ns.spec))
+
+
+def test_param_specs_guard_on_indivisible_dims():
+    # 15-wide output dim on a model=4 mesh must fall back to replication
+    from repro.dist.param_sharding import _leaf_spec
+
+    leaf = jax.ShapeDtypeStruct((8, 15), jnp.float32)
+    path = (DictKey("attn"), DictKey("wq"))
+    spec = _leaf_spec(path, leaf, fsdp=False, fsdp_experts=False)
+    assert spec == (None, "model")
+    assert resolve_spec(leaf.shape, spec, MESH_2x4) == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# stage-aware sharded stage variants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("on_mesh", [False, True])
+def test_gat_aggregate_padded_sharded_matches_unsharded(on_mesh):
+    from repro.core import stages
+
+    rng = np.random.default_rng(3)
+    n, m, h, dh, k = 10, 12, 2, 4, 5
+    p = stages.init_gat(jax.random.key(0), h, dh)
+    h_dst = jnp.asarray(rng.standard_normal((n, h, dh)), jnp.float32)
+    h_src = jnp.asarray(rng.standard_normal((m, h, dh)), jnp.float32)
+    nbr = jnp.asarray(rng.integers(0, m, (n, k)), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, (n, k)), jnp.float32)
+
+    ref = stages.gat_aggregate_padded(p, h_dst, h_src, nbr, mask)
+    if on_mesh:
+        with use_mesh(_unit_mesh()):
+            out = jax.jit(stages.gat_aggregate_padded_sharded)(
+                p, h_dst, h_src, nbr, mask)
+    else:
+        out = stages.gat_aggregate_padded_sharded(p, h_dst, h_src, nbr, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# stage-aware sharded HGNN inference entry (off-mesh path)
+# ---------------------------------------------------------------------------
+
+
+def test_hgnn_infer_entry_matches_plain_forward(tiny_hg):
+    from repro.configs.base import HGNNConfig
+    from repro.core.models import get_model
+    from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
+    from repro.launch.serve import build_hgnn_infer
+
+    DATASET_METAPATHS["tiny"] = [["M", "D", "M"], ["M", "A", "M"]]
+    DATASET_TARGET["tiny"] = "M"
+    cfg = HGNNConfig(model="han", dataset="tiny", hidden=16, n_heads=4,
+                     n_classes=3, max_degree=12, fused=True)
+    built = build_hgnn_infer(cfg, tiny_hg)
+    logits = built.fn(built.params, built.batch)
+    assert logits.shape == (40, 3)
+    assert bool(jnp.isfinite(logits).all())
+
+    model = get_model(cfg)
+    batch = model.prepare(tiny_hg)
+    params = model.init(jax.random.key(cfg.seed), batch)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(model.forward(params, batch)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_hgnn_infer_rejects_unfused_on_mesh(tiny_hg):
+    from repro.configs.base import HGNNConfig
+    from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
+    from repro.launch.serve import build_hgnn_infer
+
+    DATASET_METAPATHS["tiny"] = [["M", "D", "M"], ["M", "A", "M"]]
+    DATASET_TARGET["tiny"] = "M"
+    cfg = HGNNConfig(model="han", dataset="tiny", fused=False)
+    with pytest.raises(ValueError, match="fused"):
+        build_hgnn_infer(cfg, tiny_hg, mesh=_unit_mesh())
