@@ -6,6 +6,8 @@ FP 19%, SA 7%.
 """
 from __future__ import annotations
 
+import os
+
 from benchmarks.common import Row, emit, time_jitted
 from benchmarks.hgnn_setup import build, stage_fns
 
@@ -14,6 +16,8 @@ CASES = [
     ("han", "imdb"), ("han", "acm"), ("han", "dblp"),
     ("magnn", "imdb"), ("magnn", "acm"), ("magnn", "dblp"),
 ]
+if os.environ.get("BENCH_SMOKE"):  # CI smoke: one small case under a timeout
+    CASES = [("rgcn", "imdb")]
 
 
 def run() -> list:

@@ -1,8 +1,17 @@
 """Benchmark driver: one module per paper table/figure + the LM roofline.
-Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py contract)."""
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py contract).
+
+When the HGNN trajectory modules run (``bench_stage_breakdown`` and/or
+``bench_na_fused``), their rows are also folded into ``BENCH_hgnn.json`` at
+the repo root — the machine-readable perf baseline future PRs diff against
+(stage breakdown + fused-vs-baseline NA speedup + launch counts).
+"""
+import json
+import re
 import sys
 import time
 import traceback
+from pathlib import Path
 
 MODULES = [
     "bench_stage_breakdown",     # Fig. 2
@@ -14,8 +23,62 @@ MODULES = [
     "bench_sparsity_vs_length",  # Fig. 6a + guideline (c)
     "bench_total_vs_metapaths",  # Fig. 6b
     "bench_fusion",              # guidelines §5 before/after
+    "bench_na_fused",            # fused GAT-NA vs per-head baseline
     "bench_lm_roofline",         # 40-cell arch x shape roofline table
 ]
+
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_hgnn.json"
+
+
+def write_bench_json(results: dict) -> None:
+    """Fold HGNN trajectory rows into BENCH_hgnn.json.
+
+    Merges into the existing file so running one module never clobbers the
+    other module's committed section; only called when every selected
+    module succeeded."""
+    data: dict = {"schema": 1, "source": "benchmarks/run.py"}
+    if BENCH_JSON.exists():
+        try:
+            data.update(json.loads(BENCH_JSON.read_text()))
+        except json.JSONDecodeError:
+            pass  # rewrite a corrupt baseline from scratch
+    sb = results.get("bench_stage_breakdown")
+    if sb:
+        breakdown: dict = {}
+        for name, us, derived in sb:
+            m = re.fullmatch(r"fig2/(\w+)/(\w+)/(FP|NA|SA)", name)
+            if m:
+                breakdown.setdefault(f"{m.group(1)}/{m.group(2)}", {})[
+                    m.group(3)] = round(us, 1)
+            elif name == "fig2/avg_NA_share":
+                m2 = re.search(r"avg_na_share=([\d.]+)", derived)
+                if m2:
+                    data["avg_na_share_pct"] = float(m2.group(1))
+        # merge per case: a BENCH_SMOKE run (one case) must not shrink the
+        # committed multi-case baseline
+        data.setdefault("stage_breakdown_us", {}).update(breakdown)
+    nf = results.get("bench_na_fused")
+    if nf:
+        fused: dict = {}
+        for name, us, derived in nf:
+            if name == "na_fused/csr_baseline":
+                fused["baseline_csr_us"] = round(us, 1)
+            elif name == "na_fused/padded_per_head":
+                fused["per_head_us"] = round(us, 1)
+                m = re.search(r"na_launches=(\d+)", derived)
+                fused["na_launches_per_head"] = int(m.group(1)) if m else None
+            elif name == "na_fused/fused_all_heads":
+                fused["fused_us"] = round(us, 1)
+                m = re.search(r"speedup_vs_csr=([\d.]+)x", derived)
+                fused["speedup_vs_baseline"] = float(m.group(1)) if m else None
+                fused["na_launches_fused"] = 1
+            elif name == "na_fused/kernel_interpret_parity":
+                m = re.search(r"max_abs_err=([\d.e+-]+)", derived)
+                fused["kernel_max_abs_err"] = float(m.group(1)) if m else None
+        data["na_fused"] = fused
+    if sb or nf:
+        BENCH_JSON.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+        print(f"# wrote {BENCH_JSON.name}", flush=True)
 
 
 def main() -> None:
@@ -24,6 +87,7 @@ def main() -> None:
     only = sys.argv[1:] or None
     print("name,us_per_call,derived")
     failures = 0
+    results: dict = {}
     for name in MODULES:
         if only and name not in only:
             continue
@@ -32,11 +96,15 @@ def main() -> None:
             mod = importlib.import_module(f"benchmarks.{name}")
             from benchmarks.common import emit
 
-            emit(mod.run())
+            rows = mod.run()
+            emit(rows)
+            results[name] = rows
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
             failures += 1
             print(f"# {name} FAILED\n{traceback.format_exc()}", flush=True)
+    if not failures:  # never record a partial/failed run as the baseline
+        write_bench_json(results)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 

@@ -155,9 +155,13 @@ class HGNNConfig:
     max_instances: int = 16  # MAGNN instances sampled per target node
     # Optimized (beyond-paper / guideline) execution path:
     #   stacked subgraphs (inter-subgraph parallelism), concat-free SA,
-    #   optionally the fused FP+NA kernel.
+    #   optionally the fused GAT-NA / FP+NA kernels.
     fused: bool = False
     use_pallas: bool = False
+    # Degree-bucketed padded NA layout: >1 bins rows into that many K-caps
+    # (core/metapath.py bucket_padded) instead of one K=max_degree pad;
+    # 0/1 keeps the single stacked [P, N, K] layout. Fused path only.
+    degree_buckets: int = 0
     seed: int = 0
 
     def replace(self, **kw) -> "HGNNConfig":

@@ -46,6 +46,34 @@ class PaddedSubgraph:
 
 
 @dataclass
+class DegreeBuckets:
+    """Degree-bucketed padded layout: rows binned into a few K-caps.
+
+    One ``K = max_degree`` pad wastes reduction-tree steps on every
+    low-degree row (power-law graphs: most rows).  Binning rows into 2-3
+    buckets with per-bucket caps ``K_b`` cuts the padded edge count
+    (``sum_b n_b * K_b`` vs ``N * K``) while keeping each bucket a dense
+    TPU-friendly ``[n_b, K_b]`` tile.  ``row_ids[b]`` maps bucket rows back
+    to the original node order (the NA dispatch scatters outputs through it).
+    Empty buckets are dropped at build time.
+    """
+
+    row_ids: List[np.ndarray]  # per bucket: [n_b] int32 original row ids
+    nbr: List[np.ndarray]  # per bucket: [n_b, K_b] int32
+    mask: List[np.ndarray]  # per bucket: [n_b, K_b] float32
+    n_nodes: int
+    node_path: List[str]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.row_ids)
+
+    @property
+    def padded_edges(self) -> int:
+        return sum(nb.size for nb in self.nbr)
+
+
+@dataclass
 class CSRSubgraph:
     indptr: np.ndarray  # [N+1] int32
     indices: np.ndarray  # [nnz] int32
@@ -92,6 +120,48 @@ def build_padded(
         nbr[u, :k] = nbrs
         mask[u, :k] = 1.0
     return PaddedSubgraph(nbr, mask, list(node_path))
+
+
+def bucket_padded(
+    sub: PaddedSubgraph, n_buckets: int = 3, round_to: int = 8
+) -> DegreeBuckets:
+    """Bin a padded subgraph's rows into ``n_buckets`` degree buckets.
+
+    Caps are degree quantiles rounded up to a multiple of ``round_to`` (lane
+    friendliness); the last cap is always ``max_degree`` so no edge is
+    dropped.  Duplicate caps collapse, so fewer buckets than requested can
+    come back (e.g. a degree-uniform graph yields one).
+    """
+    deg = sub.mask.sum(axis=1).astype(np.int64)  # [N]
+    caps: List[int] = []
+    for i in range(1, n_buckets):
+        q = int(np.ceil(np.quantile(deg, i / n_buckets))) if len(deg) else 1
+        caps.append(max(round_to, int(np.ceil(max(q, 1) / round_to)) * round_to))
+    caps.append(sub.max_degree)
+    caps = sorted(set(min(c, sub.max_degree) for c in caps))
+    row_ids, nbrs, masks = [], [], []
+    assigned = np.zeros(sub.n_nodes, bool)
+    for cap in caps:
+        rows = np.flatnonzero(~assigned & (deg <= cap))
+        assigned[rows] = True
+        if len(rows) == 0:
+            continue
+        row_ids.append(rows.astype(np.int32))
+        nbrs.append(sub.nbr[rows, :cap])
+        masks.append(sub.mask[rows, :cap])
+    return DegreeBuckets(row_ids, nbrs, masks, sub.n_nodes, sub.node_path)
+
+
+def build_degree_bucketed(
+    hg: HeteroGraph,
+    node_path: Sequence[str],
+    max_degree: int = 64,
+    n_buckets: int = 3,
+    rng: Optional[np.random.Generator] = None,
+) -> DegreeBuckets:
+    """Subgraph Build straight into the degree-bucketed layout."""
+    return bucket_padded(build_padded(hg, node_path, max_degree, rng),
+                         n_buckets=n_buckets)
 
 
 def build_csr(

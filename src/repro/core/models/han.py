@@ -44,9 +44,19 @@ class HAN:
             subs = [
                 mp.build_padded(hg, p, cfg.max_degree, rng) for p in self.metapaths
             ]
-            nbr, mask = mp.stack_padded(subs)
-            batch["nbr"] = jnp.asarray(nbr)  # [P, N, K]
-            batch["mask"] = jnp.asarray(mask)
+            if cfg.degree_buckets > 1:
+                # degree-bucketed layout: per metapath, rows binned into a
+                # few K-caps (NA dispatch in stages.gat_aggregate_bucketed)
+                batch["buckets"] = [
+                    [(jnp.asarray(b.row_ids[i]), jnp.asarray(b.nbr[i]),
+                      jnp.asarray(b.mask[i])) for i in range(b.n_buckets)]
+                    for b in (mp.bucket_padded(s, cfg.degree_buckets)
+                              for s in subs)
+                ]
+            else:
+                nbr, mask = mp.stack_padded(subs)
+                batch["nbr"] = jnp.asarray(nbr)  # [P, N, K]
+                batch["mask"] = jnp.asarray(mask)
         else:
             edges = []
             for p in self.metapaths:
@@ -72,7 +82,9 @@ class HAN:
             "cls": jax.random.normal(k_cls, (d, cfg.n_classes), jnp.float32)
             / np.sqrt(d),
         }
-        if cfg.fused:  # stacked per-metapath attention params for vmap
+        if cfg.fused and cfg.degree_buckets <= 1:
+            # stacked per-metapath attention params for the one-launch path
+            # (bucketed layout keeps the per-metapath list: no uniform stack)
             params["gat"] = jax.tree.map(lambda *xs: jnp.stack(xs), *params["gat"])
         return params
 
@@ -88,14 +100,27 @@ class HAN:
     def na(self, params: Dict, batch: Dict, h: jax.Array):
         cfg = self.cfg
         if cfg.fused:
-            agg_fn = None
             if cfg.use_pallas:
                 from repro.kernels import ops as kops
-
-                agg_fn = lambda p, hd, hs, nbr, mask: kops.gat_aggregate(
-                    p, hd, hs, nbr, mask, use_pallas=True)
-            z = stages.gat_aggregate_padded_stacked(
-                params["gat"], h, batch["nbr"], batch["mask"], agg_fn=agg_fn)
+            if "buckets" in batch:  # degree-bucketed dispatch (per metapath)
+                agg_fn = None
+                if cfg.use_pallas:
+                    agg_fn = lambda p, hd, hs, nn, mm: kops.gat_aggregate(
+                        p, hd, hs, nn, mm, use_pallas=True)
+                z = jnp.stack([
+                    stages.gat_aggregate_bucketed(p_i, h, h, bks, agg_fn=agg_fn)
+                    for p_i, bks in zip(params["gat"], batch["buckets"])
+                ])  # [P, N, H, Dh]
+            else:
+                stacked_fn = None
+                if cfg.use_pallas:
+                    # ONE fused kernel launch for the whole [P, N, K] stack
+                    stacked_fn = lambda pp, hd, hs, nn, mm: (
+                        kops.gat_aggregate_stacked(pp, hd, hs, nn, mm,
+                                                   use_pallas=True))
+                z = stages.gat_aggregate_padded_stacked(
+                    params["gat"], h, batch["nbr"], batch["mask"],
+                    stacked_fn=stacked_fn)
             z = jax.nn.elu(z)  # [P, N, H, Dh]
             return z.reshape(z.shape[0], z.shape[1], -1)  # [P, N, D]
         # baseline: independent kernels per subgraph (the paper's Fig. 5c timeline)

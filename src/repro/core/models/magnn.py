@@ -78,7 +78,19 @@ class MAGNN:
             h_path = h_path.reshape(n, i, l, H, -1)
             enc = stages.rotate_encoder(h_path)  # [N, I, H, Dh]
             h_tgt = h[self.target].reshape(-1, H, h_path.shape[-1])
-            z = stages.instance_aggregate(p_i, h_tgt, enc, mask)
+            if cfg.use_pallas:
+                # Instance attention IS padded GAT NA with the encoded
+                # instances as the source pool: node n's instances live at
+                # rows [n*I, (n+1)*I) of the flattened table, so the fused
+                # kernel covers MAGNN with an arange neighbor grid.
+                from repro.kernels import ops as kops
+
+                flat = enc.reshape(n * i, H, enc.shape[-1])
+                nbr_inst = jnp.arange(n * i, dtype=jnp.int32).reshape(n, i)
+                z = kops.gat_aggregate(p_i, h_tgt, flat, nbr_inst, mask,
+                                       use_pallas=True)
+            else:
+                z = stages.instance_aggregate(p_i, h_tgt, enc, mask)
             outs.append(jax.nn.elu(z).reshape(n, -1))  # [N, D]
         return outs
 

@@ -96,8 +96,17 @@ class RGCN:
             s, r, d = key
             a, b = batch["rels"][key]
             if self.cfg.fused:
+                agg_fn = None
+                if self.cfg.use_pallas:
+                    # Pallas segment-SpMM on the TB-Type hot loop; streams
+                    # the source table from HBM when it exceeds VMEM.
+                    from repro.kernels import ops as kops
+
+                    agg_fn = lambda hs, nn, mm: kops.segment_spmm(
+                        hs, nn, mm, mean=True, use_pallas=True)
                 # stage-aware sharded NA (no-op off-mesh)
-                agg = stages.mean_aggregate_padded_sharded(h[s], a, b)
+                agg = stages.mean_aggregate_padded_sharded(h[s], a, b,
+                                                           agg_fn=agg_fn)
             else:
                 agg = stages.mean_aggregate_csr(h[s], a, b, batch["counts"][d])
             out["|".join(key)] = agg @ params["w_rel"][key]

@@ -162,18 +162,48 @@ def gat_aggregate_padded_stacked(
     nbr: jax.Array,  # [P, N, K] stacked per-metapath subgraphs
     mask: jax.Array,
     agg_fn: Optional[Callable] = None,
+    stacked_fn: Optional[Callable] = None,
 ) -> jax.Array:
     """Inter-subgraph-parallel NA over stacked padded subgraphs with the
     stage-aware sharding applied at the stacked level (constraints sit
     outside the vmap): destination nodes over BATCH, source pool replicated,
-    metapath dim unsharded.  ``agg_fn`` swaps in the Pallas kernel path."""
-    base = agg_fn or gat_aggregate_padded
+    metapath dim unsharded.  ``agg_fn`` swaps the per-subgraph body (vmapped
+    over the stack); ``stacked_fn`` consumes the whole ``[P, N, K]`` stack in
+    one call — the fused Pallas GAT-NA kernel path, ONE launch per stack."""
     h_src = shard(h, *HGNN_STAGE_SPECS["na_src"])
     nbr = shard(nbr, None, *HGNN_STAGE_SPECS["na_nbr"])
     mask = shard(mask, None, *HGNN_STAGE_SPECS["na_nbr"])
-    z = jax.vmap(lambda pp, nn, mm: base(pp, h, h_src, nn, mm),
-                 in_axes=(0, 0, 0))(p_stacked, nbr, mask)
+    if stacked_fn is not None:
+        z = stacked_fn(p_stacked, h, h_src, nbr, mask)
+    else:
+        base = agg_fn or gat_aggregate_padded
+        z = jax.vmap(lambda pp, nn, mm: base(pp, h, h_src, nn, mm),
+                     in_axes=(0, 0, 0))(p_stacked, nbr, mask)
     return shard(z, None, *HGNN_STAGE_SPECS["na_out"])
+
+
+def gat_aggregate_bucketed(
+    p: Dict[str, jax.Array],
+    h_dst: jax.Array,  # [N, H, Dh]
+    h_src: jax.Array,  # [M, H, Dh]
+    buckets,  # sequence of (row_ids [n_b], nbr [n_b, K_b], mask) device arrays
+    agg_fn: Optional[Callable] = None,
+) -> jax.Array:
+    """GAT NA over a degree-bucketed layout (``core.metapath.bucket_padded``).
+
+    Each bucket runs the padded aggregation at its own degree cap ``K_b``
+    (2-3 dense launches instead of one ``K=max_degree`` launch whose
+    reduction tree is mostly padding); outputs scatter back to node order
+    through ``row_ids``.  ``agg_fn`` swaps in the fused Pallas kernel."""
+    base = agg_fn or gat_aggregate_padded
+    h_src = shard(h_src, *HGNN_STAGE_SPECS["na_src"])
+    out = jnp.zeros(h_dst.shape, h_dst.dtype)
+    for row_ids, nbr, mask in buckets:
+        z = base(p, jnp.take(h_dst, row_ids, axis=0), h_src,
+                 shard(nbr, *HGNN_STAGE_SPECS["na_nbr"]),
+                 shard(mask, *HGNN_STAGE_SPECS["na_nbr"]))
+        out = out.at[row_ids].set(z.astype(out.dtype))
+    return shard(out, *HGNN_STAGE_SPECS["na_out"])
 
 
 def mean_aggregate_padded(h_src: jax.Array, nbr: jax.Array, mask: jax.Array) -> jax.Array:
@@ -185,14 +215,18 @@ def mean_aggregate_padded(h_src: jax.Array, nbr: jax.Array, mask: jax.Array) -> 
 
 
 def mean_aggregate_padded_sharded(
-    h_src: jax.Array, nbr: jax.Array, mask: jax.Array
+    h_src: jax.Array, nbr: jax.Array, mask: jax.Array,
+    agg_fn: Optional[Callable] = None,
 ) -> jax.Array:
     """Mean NA (RGCN) with stage-aware sharding: destinations over BATCH,
-    source pool replicated.  No-op off-mesh."""
-    h_src = shard(h_src, None, None)
+    source pool replicated (``HGNN_STAGE_SPECS["na_src"]``; spec entries past
+    ``h_src.ndim`` are ignored by ``resolve_spec``).  No-op off-mesh.
+    ``agg_fn`` swaps in the Pallas ``segment_spmm`` kernel."""
+    h_src = shard(h_src, *HGNN_STAGE_SPECS["na_src"])
     nbr = shard(nbr, *HGNN_STAGE_SPECS["na_nbr"])
     mask = shard(mask, *HGNN_STAGE_SPECS["na_nbr"])
-    return shard(mean_aggregate_padded(h_src, nbr, mask), BATCH, None)
+    base = agg_fn or mean_aggregate_padded
+    return shard(base(h_src, nbr, mask), BATCH, None)
 
 
 def mean_aggregate_csr(

@@ -19,6 +19,7 @@ from repro.kernels import (
     decode_attention as _dec,
     flash_attention as _fa,
     fused_fp_na as _ffn,
+    gat_na as _gat,
     ref,
     segment_spmm as _spmm,
     semantic_attn as _sem,
@@ -71,30 +72,29 @@ def decode_attention(q, k, v, kv_len, use_pallas: bool = False,
     return ref.decode_attention(q, k, v, kv_len)
 
 
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def gat_aggregate(p: Dict, h_dst, h_src, nbr, mask, use_pallas: bool = False,
                   interpret: bool = False):
-    """GAT NA with the Pallas segment kernel on the weighted-gather hot loop.
+    """Fused multi-head GAT NA: SDDMM + segment-softmax + weighted reduce in
+    ONE kernel launch for all heads (kernels/gat_na.py).
 
-    Attention weights (EW-Type math) are computed in XLA; the gather+reduce
-    (TB-Type, the paper's dominant cost) runs in the kernel by folding the
-    per-edge weight into the mask: sum_k alpha_k * h[nbr_k] ==
-    segment_spmm(h, nbr, mask=alpha, mean=False).
+    Replaces the seed's split execution (edge scores in XLA re-gathering
+    ``h_src[nbr]``, then one ``segment_spmm`` launch per head): the neighbor
+    tile is gathered exactly once and every head rides the same gather.
+    Large source tables stream from HBM instead of falling back to the ref.
     """
-    e_dst = (h_dst * p["a_dst"]).sum(-1)  # [N, H]
-    e_src = (h_src * p["a_src"]).sum(-1)  # [M, H]
-    e = e_dst[:, None, :] + e_src[nbr]  # [N, K, H]
-    e = jnp.where(e >= 0, e, 0.2 * e)
-    e = jnp.where(mask[..., None] > 0, e, -1e9)
-    e = e - jax.lax.stop_gradient(e.max(axis=1, keepdims=True))
-    w = jnp.exp(e) * mask[..., None]
-    alpha = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)  # [N, K, H]
-    n, h_heads, dh = h_dst.shape
-    outs = []
-    for hh in range(h_heads):  # heads loop: small (≤8) static unroll
-        outs.append(
-            segment_spmm(
-                h_src[:, hh, :], nbr, alpha[:, :, hh], mean=False,
-                use_pallas=use_pallas, interpret=interpret,
-            )
-        )
-    return jnp.stack(outs, axis=1)  # [N, H, Dh]
+    if use_pallas and (_on_tpu() or interpret):
+        return _gat.gat_na(p, h_dst, h_src, nbr, mask, interpret=interpret)
+    return ref.gat_na(p, h_dst, h_src, nbr, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gat_aggregate_stacked(p_stacked: Dict, h_dst, h_src, nbr, mask,
+                          use_pallas: bool = False, interpret: bool = False):
+    """Stacked form: ``nbr/mask [P, N, K]``, params ``[P, H, Dh]`` — the whole
+    metapath stack (HAN's inter-subgraph parallelism) is ONE kernel launch
+    (the stack dim rides the Pallas grid), not P launches of H kernels."""
+    if use_pallas and (_on_tpu() or interpret):
+        return _gat.gat_na(p_stacked, h_dst, h_src, nbr, mask,
+                           interpret=interpret)
+    return ref.gat_na(p_stacked, h_dst, h_src, nbr, mask)

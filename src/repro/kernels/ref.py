@@ -39,6 +39,29 @@ def fused_fp_na(
     return segment_spmm(x_src, nbr, mask, mean=mean) @ w
 
 
+def gat_na(
+    p,  # {"a_dst": [H, Dh], "a_src": [H, Dh]} (leading [S] dim when stacked)
+    h_dst: jax.Array,  # [N, H, Dh]
+    h_src: jax.Array,  # [M, H, Dh]
+    nbr: jax.Array,  # [N, K] int32 ([S, N, K] stacked)
+    mask: jax.Array,  # [N, K] {0,1} ([S, N, K] stacked)
+) -> jax.Array:
+    """Fused multi-head GAT NA oracle: SDDMM + segment-softmax + weighted
+    reduce for all heads in one formulation (the kernel's contract)."""
+    if nbr.ndim == 3:
+        return jax.vmap(lambda pp, nn, mm: gat_na(pp, h_dst, h_src, nn, mm))(
+            p, nbr, mask)
+    e_dst = (h_dst * p["a_dst"]).sum(-1)  # [N, H]
+    e_src = (h_src * p["a_src"]).sum(-1)  # [M, H]
+    e = e_dst[:, None, :] + e_src[nbr]  # [N, K, H]  SDDMM
+    e = jnp.where(e >= 0, e, 0.2 * e)
+    e = jnp.where(mask[..., None] != 0, e, -1e9)
+    e = e - jax.lax.stop_gradient(e.max(axis=1, keepdims=True))
+    w = jnp.exp(e) * mask[..., None]
+    alpha = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-9)
+    return jnp.einsum("nkh,nkhd->nhd", alpha, h_src[nbr])  # weighted reduce
+
+
 def semantic_attention(
     z: jax.Array,  # [P, N, D]
     w: jax.Array,  # [D, Hs]

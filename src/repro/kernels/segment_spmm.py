@@ -7,10 +7,14 @@ scatter, so the TPU-native formulation is a *degree-capped padded* layout
 dense VMEM tiles (guideline (d): reduction-tree dataflow).
 
 Blocking: grid over row tiles of size ``block_n``; the neighbor-id tile and
-mask tile live in VMEM; the source feature table ``h_src`` is kept whole in
-VMEM (HGNN latent tables are small: N×D ≈ 4k×64 ≈ 1 MB ≪ 16 MB v5e VMEM).
-For tables that exceed VMEM the wrapper falls back to the XLA path — noted in
-ops.py.
+mask tile live in VMEM.  The source feature table has two paths:
+
+* **resident** — small tables (HGNN latent: N x D ~ 4k x 64 ~ 1 MB) are one
+  whole-table BlockSpec; the Pallas pipeline keeps them in VMEM across tiles.
+* **streaming** — larger tables stay in HBM; a scalar-prefetched chunk
+  schedule drives double-buffered ``make_async_copy`` DMAs and each chunk is
+  gathered via an in-chunk mask (see ``kernels/streaming.py``).  No more
+  silent fallback to the XLA ref for big graphs.
 """
 from __future__ import annotations
 
@@ -19,22 +23,71 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import streaming
+
+
+def _accumulate(acc, nbr, mask, hbuf, lo):
+    """Masked K-step gather-reduce of one source chunk into ``acc``."""
+    bm = hbuf.shape[0]
+    in_chunk = (nbr >= lo) & (nbr < lo + bm)
+    loc = jnp.where(in_chunk, nbr - lo, 0)
+    w = mask.astype(jnp.float32) * in_chunk.astype(jnp.float32)
+    k = nbr.shape[1]
+    for j in range(k):  # K-step reduction tree
+        rows = jnp.take(hbuf, loc[:, j], axis=0)
+        acc = acc + rows.astype(jnp.float32) * w[:, j][:, None]
+    return acc
+
+
+def _mean(acc, mask, mean: bool):
+    if mean:
+        deg = jnp.maximum(mask.astype(jnp.float32).sum(axis=1, keepdims=True),
+                          1.0)
+        acc = acc / deg
+    return acc
 
 
 def _kernel(nbr_ref, mask_ref, hsrc_ref, out_ref, *, mean: bool):
     nbr = nbr_ref[...]  # [BN, K] int32
     mask = mask_ref[...]  # [BN, K]
-    h = hsrc_ref[...]  # [M, D] (whole table in VMEM)
-    k = nbr.shape[1]
-    acc = jnp.zeros((nbr.shape[0], h.shape[1]), jnp.float32)
-    # K-step reduction tree: each step is a dense row-gather + masked add.
-    for j in range(k):
-        rows = jnp.take(h, nbr[:, j], axis=0)  # [BN, D]
-        acc = acc + rows.astype(jnp.float32) * mask[:, j][:, None].astype(jnp.float32)
-    if mean:
-        deg = jnp.maximum(mask.astype(jnp.float32).sum(axis=1, keepdims=True), 1.0)
-        acc = acc / deg
-    out_ref[...] = acc.astype(out_ref.dtype)
+    acc = jnp.zeros((nbr.shape[0], hsrc_ref.shape[1]), jnp.float32)
+    acc = _accumulate(acc, nbr, mask, hsrc_ref[...], 0)
+    out_ref[...] = _mean(acc, mask, mean).astype(out_ref.dtype)
+
+
+def _stream_kernel(sched_ref, count_ref, nbr_ref, mask_ref, hsrc_ref, out_ref,
+                   buf, sem, *, mean: bool, block_m: int):
+    t = pl.program_id(0)
+    nc = count_ref[t]
+    nbr = nbr_ref[...]
+    mask = mask_ref[...]
+
+    def get_dma(slot, s):
+        c = sched_ref[t, s]
+        return pltpu.make_async_copy(
+            hsrc_ref.at[pl.ds(c * block_m, block_m), :], buf.at[slot],
+            sem.at[slot])
+
+    @pl.when(nc > 0)
+    def _warmup():
+        get_dma(0, 0).start()
+
+    def body(s, acc):
+        slot = jax.lax.rem(s, 2)
+
+        @pl.when(s + 1 < nc)  # double buffer: next chunk in flight
+        def _():
+            get_dma(jax.lax.rem(s + 1, 2), s + 1).start()
+
+        get_dma(slot, s).wait()
+        lo = sched_ref[t, s] * block_m
+        return _accumulate(acc, nbr, mask, buf[slot], lo)
+
+    acc0 = jnp.zeros((nbr.shape[0], out_ref.shape[1]), jnp.float32)
+    acc = jax.lax.fori_loop(0, nc, body, acc0)
+    out_ref[...] = _mean(acc, mask, mean).astype(out_ref.dtype)
 
 
 def segment_spmm(
@@ -43,6 +96,8 @@ def segment_spmm(
     mask: jax.Array,
     mean: bool = True,
     block_n: int = 128,
+    block_m: int = 0,  # 0 = auto (resident if the table fits, else 512)
+    vmem_budget: int = streaming.VMEM_TABLE_BUDGET,
     interpret: bool = False,
 ) -> jax.Array:
     n, k = nbr.shape
@@ -51,17 +106,52 @@ def segment_spmm(
     if n_pad:
         nbr = jnp.pad(nbr, ((0, n_pad), (0, 0)))
         mask = jnp.pad(mask, ((0, n_pad), (0, 0)))
+    nbr = nbr.astype(jnp.int32)
     grid = ((n + n_pad) // block_n,)
-    out = pl.pallas_call(
-        functools.partial(_kernel, mean=mean),
+    out_shape = jax.ShapeDtypeStruct((n + n_pad, d), h_src.dtype)
+
+    resident = block_m == 0 and streaming.table_fits_vmem(
+        m, d * h_src.dtype.itemsize, vmem_budget)
+    if resident:
+        out = pl.pallas_call(
+            functools.partial(_kernel, mean=mean),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+                pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+                pl.BlockSpec((m, d), lambda i: (0, 0)),  # whole feature table
+            ],
+            out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(nbr, mask, h_src)
+        return out[:n]
+
+    if block_m == 0:
+        block_m = 512
+    block_m = min(block_m, max(m, 1))
+    h_src = streaming.pad_rows(h_src, block_m)
+    n_chunks = h_src.shape[0] // block_m
+    sched, count = streaming.chunk_schedule(nbr, mask, block_n, n_chunks,
+                                            block_m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
-            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
-            pl.BlockSpec((m, d), lambda i: (0, 0)),  # whole feature table
+            pl.BlockSpec((block_n, k), lambda i, *_: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i, *_: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # h_src stays in HBM
         ],
-        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n + n_pad, d), h_src.dtype),
+        out_specs=pl.BlockSpec((block_n, d), lambda i, *_: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, block_m, d), h_src.dtype),  # double buffer
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_stream_kernel, mean=mean, block_m=block_m),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
         interpret=interpret,
-    )(nbr, mask, h_src)
+    )(sched, count, nbr, mask, h_src)
     return out[:n]

@@ -45,10 +45,13 @@ def hgnn_shardings(params: Any, batch: Any, mesh: Mesh):
 
     Follows ``repro.core.stages.HGNN_STAGE_SPECS``: FP projection matrices
     column-sharded over 'model' (DM-Type), padded neighbor tables sharded
-    over destination nodes on the batch axes (TB-Type), everything small
-    (attention vectors, classifier, features pool) replicated.
+    over destination nodes on the batch axes (TB-Type) — including the
+    degree-bucketed layout, whose per-bucket ``(row_ids, nbr, mask)`` tuples
+    ride the same destination-node sharding — everything small (attention
+    vectors, classifier, features pool) replicated.
     """
     from repro.core.stages import HGNN_STAGE_SPECS
+    from repro.dist.sharding import BATCH
 
     rep = NamedSharding(mesh, P())
 
@@ -68,6 +71,11 @@ def hgnn_shardings(params: Any, batch: Any, mesh: Mesh):
             return named(leaf.shape, (None,) + HGNN_STAGE_SPECS["na_nbr"])
         if "rels" in keys and nd == 2:  # RGCN per-relation (nbr, mask)
             return named(leaf.shape, HGNN_STAGE_SPECS["na_nbr"])
+        if "buckets" in keys:  # degree-bucketed HAN: per-bucket tuples
+            if nd == 2:  # nbr / mask [n_b, K_b]
+                return named(leaf.shape, HGNN_STAGE_SPECS["na_nbr"])
+            if nd == 1:  # row_ids ride the destination-node sharding
+                return named(leaf.shape, (BATCH,))
         return rep
 
     return tree_map_with_path(param_sh, params), tree_map_with_path(batch_sh, batch)
@@ -111,7 +119,9 @@ def run_hgnn(args) -> None:
     from repro.data.synthetic import make_dataset
     from repro.launch.mesh import make_smoke_mesh
 
-    cfg = HGNNConfig(model=args.hgnn, dataset=args.dataset, fused=True)
+    cfg = HGNNConfig(model=args.hgnn, dataset=args.dataset, fused=True,
+                     use_pallas=args.use_pallas,
+                     degree_buckets=args.degree_buckets)
     hg = make_dataset(args.dataset)
     mesh = None
     if args.mesh_data * args.mesh_model > 1:
@@ -144,6 +154,11 @@ def main() -> None:
                     choices=["imdb", "acm", "dblp", "reddit"])
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="fused GAT-NA / segment-SpMM Pallas kernels "
+                         "(TPU backend)")
+    ap.add_argument("--degree-buckets", type=int, default=0,
+                    help=">1: degree-bucketed padded NA layout (HAN)")
     ap.add_argument("--iters", type=int, default=3)
     args = ap.parse_args()
 

@@ -40,11 +40,19 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, t, c, pos: tf.lm_decode_step(p, cfg, t, c, pos))
 
-    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
+    def _sample(self, logits: jax.Array, temps: Optional[jax.Array]) -> jax.Array:
+        """Per-slot sampling: each request in the wave keeps its own
+        temperature (greedy where <= 0, categorical otherwise).  ``temps``
+        is the device array built ONCE per wave by ``_run_wave`` — None
+        means an all-greedy wave, so the per-token loop never re-uploads or
+        re-reduces wave-constant facts."""
+        greedy = jnp.argmax(logits, axis=-1)
+        if temps is None:
+            return greedy
         self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits / temperature, axis=-1)
+        sampled = jax.random.categorical(
+            sub, logits / jnp.maximum(temps, 1e-6)[:, None], axis=-1)
+        return jnp.where(temps > 0.0, sampled, greedy)
 
     def generate(self, requests: List[Request]) -> List[Request]:
         """Simple batched generation: pad prompts to a common length, prefill
@@ -66,13 +74,15 @@ class ServeEngine:
         caches = tf.graft_prefill_caches(
             cfg, tf.init_kv_caches(cfg, b, self.max_len), pf_caches, t0)
         max_new = max(r.max_tokens for r in wave)
-        cur = self._sample(logits[:, 0], wave[0].temperature)
+        temps_host = np.array([r.temperature for r in wave], np.float32)
+        temps = (jnp.asarray(temps_host) if (temps_host > 0).any() else None)
+        cur = self._sample(logits[:, 0], temps)
         outs = [[int(cur[i])] for i in range(b)]
         done = np.zeros(b, bool)
         for step in range(1, max_new):
             pos = jnp.int32(t0 + step - 1)
             logits, caches = self._decode(self.params, cur[:, None], caches, pos)
-            cur = self._sample(logits[:, 0], wave[0].temperature)
+            cur = self._sample(logits[:, 0], temps)
             for i in range(b):
                 if done[i] or step >= wave[i].max_tokens:
                     done[i] = True

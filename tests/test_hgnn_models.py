@@ -44,6 +44,22 @@ def test_fused_path_close_to_baseline(model, tiny_hg):
     np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=2e-3, atol=2e-3)
 
 
+def test_han_degree_bucketed_matches_stacked(tiny_hg):
+    """Degree-bucketed NA layout (2-3 K-caps) is a pure layout change: the
+    forward must match the single-K stacked fused path exactly."""
+    m1, p1, b1 = _run("han", tiny_hg, fused=True, max_degree=48)
+    m2, p2, b2 = _run("han", tiny_hg, fused=True, max_degree=48,
+                      degree_buckets=3)
+    assert "buckets" in b2 and "nbr" not in b2
+    # layout strictly smaller than the single-K pad
+    padded = sum(t[1].size for bk in b2["buckets"] for t in bk)
+    assert padded < b1["nbr"].size
+    l1 = m1.forward(p1, b1)
+    l2 = m2.forward(p2, b2)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_gat_csr_matches_padded(tiny_hg):
     from repro.core import metapath as mp
 

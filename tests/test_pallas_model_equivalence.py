@@ -10,20 +10,81 @@ from repro.core.models import get_model
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
-def test_han_pallas_path_matches_xla(tiny_hg, monkeypatch):
+def _tiny_tables():
     DATASET_METAPATHS["tiny"] = [["M", "D", "M"], ["M", "A", "M"]]
     DATASET_TARGET["tiny"] = "M"
-    # force the ops wrapper to take the Pallas path in interpret mode
+
+
+def _force_interpret(monkeypatch, name):
+    """Force an ops wrapper onto the Pallas path in interpret mode."""
     from repro.kernels import ops
 
-    orig = ops.gat_aggregate
+    orig = getattr(ops, name)
     monkeypatch.setattr(
-        ops, "gat_aggregate",
-        lambda p, hd, hs, nbr, mask, use_pallas=False, interpret=False:
-        orig(p, hd, hs, nbr, mask, use_pallas=True, interpret=True))
+        ops, name,
+        lambda *args, use_pallas=False, interpret=False, **kw:
+        orig(*args, use_pallas=True, interpret=True, **kw))
+
+
+def test_han_pallas_path_matches_xla(tiny_hg, monkeypatch):
+    """HAN's fused path launches the stacked GAT-NA kernel ONCE for the
+    whole [P, N, K] metapath stack."""
+    _tiny_tables()
+    _force_interpret(monkeypatch, "gat_aggregate_stacked")
 
     cfg_x = HGNNConfig(model="han", dataset="tiny", hidden=16, n_heads=4,
                        n_classes=3, max_degree=48, fused=True, use_pallas=False)
+    cfg_p = cfg_x.replace(use_pallas=True)
+    m_x, m_p = get_model(cfg_x), get_model(cfg_p)
+    b_x, b_p = m_x.prepare(tiny_hg), m_p.prepare(tiny_hg)
+    params = m_x.init(jax.random.key(0), b_x)
+    lx = m_x.forward(params, b_x)
+    lp = m_p.forward(params, b_p)
+    np.testing.assert_allclose(np.asarray(lx), np.asarray(lp),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_han_bucketed_pallas_path_matches_xla(tiny_hg, monkeypatch):
+    """Degree-bucketed layout + fused kernel vs the plain stacked XLA path."""
+    _tiny_tables()
+    _force_interpret(monkeypatch, "gat_aggregate")
+
+    cfg_x = HGNNConfig(model="han", dataset="tiny", hidden=16, n_heads=4,
+                       n_classes=3, max_degree=48, fused=True)
+    cfg_b = cfg_x.replace(degree_buckets=3, use_pallas=True)
+    m_x, m_b = get_model(cfg_x), get_model(cfg_b)
+    b_x, b_b = m_x.prepare(tiny_hg), m_b.prepare(tiny_hg)
+    lx = m_x.forward(m_x.init(jax.random.key(0), b_x), b_x)
+    lb = m_b.forward(m_b.init(jax.random.key(0), b_b), b_b)
+    np.testing.assert_allclose(np.asarray(lx), np.asarray(lb),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_magnn_pallas_path_matches_xla(tiny_hg, monkeypatch):
+    """MAGNN instance attention through the fused GAT-NA kernel (instances
+    as the source pool, arange neighbor grid)."""
+    _tiny_tables()
+    _force_interpret(monkeypatch, "gat_aggregate")
+
+    cfg_x = HGNNConfig(model="magnn", dataset="tiny", hidden=16, n_heads=4,
+                       n_classes=3, max_instances=4, use_pallas=False)
+    cfg_p = cfg_x.replace(use_pallas=True)
+    m_x, m_p = get_model(cfg_x), get_model(cfg_p)
+    b_x, b_p = m_x.prepare(tiny_hg), m_p.prepare(tiny_hg)
+    params = m_x.init(jax.random.key(0), b_x)
+    lx = m_x.forward(params, b_x)
+    lp = m_p.forward(params, b_p)
+    np.testing.assert_allclose(np.asarray(lx), np.asarray(lp),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_rgcn_pallas_path_matches_xla(tiny_hg, monkeypatch):
+    """RGCN's mean NA through the (streaming-capable) segment-SpMM kernel."""
+    _tiny_tables()
+    _force_interpret(monkeypatch, "segment_spmm")
+
+    cfg_x = HGNNConfig(model="rgcn", dataset="tiny", hidden=16, n_heads=4,
+                       n_classes=3, max_degree=48, fused=True)
     cfg_p = cfg_x.replace(use_pallas=True)
     m_x, m_p = get_model(cfg_x), get_model(cfg_p)
     b_x, b_p = m_x.prepare(tiny_hg), m_p.prepare(tiny_hg)
