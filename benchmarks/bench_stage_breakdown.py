@@ -3,6 +3,11 @@ RGCN / HAN / MAGNN on IMDB / ACM / DBLP (baseline, DGL-faithful path).
 
 Paper claim to validate: Neighbor Aggregation dominates (74% on average);
 FP 19%, SA 7%.
+
+Alongside the wall-clock shares, each stage also gets a characterization
+record (FLOPs / HBM bytes / roofline bound via ``core/characterize.py``)
+from the stage-graph executor — the same plan/codepath that serves traffic
+(``fig2/<model>/<ds>/<stage>/char`` rows, folded into ``BENCH_hgnn.json``).
 """
 from __future__ import annotations
 
@@ -10,6 +15,7 @@ import os
 
 from benchmarks.common import Row, emit, time_jitted
 from benchmarks.hgnn_setup import build, stage_fns
+from repro.core.characterize import analyze_hlo_text, roofline
 
 CASES = [
     ("rgcn", "imdb"), ("rgcn", "acm"), ("rgcn", "dblp"),
@@ -35,9 +41,22 @@ def run() -> list:
             share = 100.0 * times[stage] / total
             rows.append((f"fig2/{model}/{ds}/{stage}", times[stage],
                          f"share={share:.1f}%"))
+        # per-stage characterization from the same executor stage fns —
+        # after ALL wall timings so compile work never skews them
+        for stage in ("FP", "NA", "SA"):
+            fn, args = fns[stage]
+            rep = analyze_hlo_text(fn.lower(*args).compile().as_text())
+            bound = roofline(rep, 1, 0.0)["bound"]
+            rows.append((f"fig2/{model}/{ds}/{stage}/char", 0.0,
+                         f"flops={rep['total_flops']:.6g} "
+                         f"hbm_bytes={rep['total_hbm_bytes']:.6g} "
+                         f"bound={bound}"))
         na_shares.append(100.0 * times["NA"] / total)
-    rows.append(("fig2/avg_NA_share", 0.0,
-                 f"avg_na_share={sum(na_shares)/len(na_shares):.1f}%_paper=74%"))
+    if not os.environ.get("BENCH_SMOKE"):
+        # the average is only meaningful over the full 9-case matrix; a
+        # smoke run must not overwrite the committed figure with one case
+        rows.append(("fig2/avg_NA_share", 0.0,
+                     f"avg_na_share={sum(na_shares)/len(na_shares):.1f}%_paper=74%"))
     return rows
 
 

@@ -32,14 +32,8 @@ def build(model: str, dataset: str, fused: bool = False, hidden: int = 64,
 def stage_fns(m, params, batch):
     """Jitted per-stage callables chained on concrete intermediates.
 
-    The separate jit per stage mirrors DGL's separate kernel launches and
-    exposes the NA->SA barrier (paper Fig. 5c)."""
-    fp = jax.jit(lambda p: m.fp(p, batch))
-    h = fp(params)
-    na = jax.jit(lambda p, hh: m.na(p, batch, hh))
-    z = na(params, h)
-    sa = jax.jit(lambda p, zz: m.sa(p, batch, zz))
-    out = sa(params, z)
-    head = jax.jit(lambda p, oo: m.head(p, oo))
-    return {"FP": (fp, (params,)), "NA": (na, (params, h)),
-            "SA": (sa, (params, z)), "head": (head, (params, out))}
+    Delegates to the stage-graph executor (core/pipeline.py) so benchmarks
+    measure the exact code path that serves traffic; the separate jit per
+    stage mirrors DGL's separate kernel launches and exposes the NA->SA
+    barrier (paper Fig. 5c)."""
+    return m.executor.stage_fns(params, batch)

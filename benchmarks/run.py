@@ -1,12 +1,20 @@
 """Benchmark driver: one module per paper table/figure + the LM roofline.
 Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py contract).
 
-When the HGNN trajectory modules run (``bench_stage_breakdown`` and/or
-``bench_na_fused``), their rows are also folded into ``BENCH_hgnn.json`` at
-the repo root — the machine-readable perf baseline future PRs diff against
-(stage breakdown + fused-vs-baseline NA speedup + launch counts).
+When the HGNN trajectory modules run (``bench_stage_breakdown``,
+``bench_na_fused`` and/or ``bench_sa_epilogue``), their rows are also folded
+into ``BENCH_hgnn.json`` at the repo root — the machine-readable perf
+baseline future PRs diff against (per-stage wall + characterization
+breakdown, fused-vs-baseline NA speedup + launch counts, and the fused
+NA→SA epilogue's saved-HBM-pass snapshot).
+
+``--check`` turns the run into a regression gate: before the new snapshot is
+written, the fresh NA/SA stage times are diffed against the committed
+``BENCH_hgnn.json`` and the run fails on a >20% regression (with a small
+absolute floor, ``BENCH_GATE_FLOOR_US``, to absorb CI timer noise).
 """
 import json
+import os
 import re
 import sys
 import time
@@ -24,10 +32,82 @@ MODULES = [
     "bench_total_vs_metapaths",  # Fig. 6b
     "bench_fusion",              # guidelines §5 before/after
     "bench_na_fused",            # fused GAT-NA vs per-head baseline
+    "bench_sa_epilogue",         # fused NA->SA epilogue HBM-pass snapshot
     "bench_lm_roofline",         # 40-cell arch x shape roofline table
 ]
 
 BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_hgnn.json"
+
+
+def parse_breakdown(rows) -> dict:
+    """``fig2/<model>/<ds>/<stage>`` wall rows -> {case: {stage: us}}."""
+    out: dict = {}
+    for name, us, derived in rows:
+        m = re.fullmatch(r"fig2/(\w+)/(\w+)/(FP|NA|SA)", name)
+        if m:
+            out.setdefault(f"{m.group(1)}/{m.group(2)}", {})[
+                m.group(3)] = round(us, 1)
+    return out
+
+
+def parse_characterization(rows) -> dict:
+    """``fig2/<model>/<ds>/<stage>/char`` rows -> {case: {stage: metrics}}."""
+    out: dict = {}
+    for name, us, derived in rows:
+        m = re.fullmatch(r"fig2/(\w+)/(\w+)/(FP|NA|SA)/char", name)
+        if m:
+            d = dict(kv.split("=", 1) for kv in derived.split())
+            out.setdefault(f"{m.group(1)}/{m.group(2)}", {})[
+                m.group(3)] = {"flops": float(d["flops"]),
+                               "hbm_bytes": float(d["hbm_bytes"]),
+                               "bound": d["bound"]}
+    return out
+
+
+def check_regression(results: dict, threshold: float = 0.20) -> None:
+    """Bench-regression gate: diff the fresh NA/SA stage costs against the
+    committed ``BENCH_hgnn.json``; fail on >``threshold`` regression.
+
+    Two comparisons per case/stage: wall time (gated behind an absolute
+    floor — CPU CI timers are noisy and the committed numbers come from a
+    different machine) and the characterization records (FLOPs / HBM bytes
+    from the compiled HLO — deterministic, so no floor: a >20% byte or FLOP
+    growth is a real code regression regardless of the runner)."""
+    sb = results.get("bench_stage_breakdown")
+    if not sb or not BENCH_JSON.exists():
+        return
+    try:
+        committed = json.loads(BENCH_JSON.read_text())
+    except json.JSONDecodeError:
+        return
+    old = committed.get("stage_breakdown_us", {})
+    old_char = committed.get("stage_characterization", {})
+    floor_us = float(os.environ.get("BENCH_GATE_FLOOR_US", "2000"))
+    regressions = []
+    for case, stages in parse_breakdown(sb).items():
+        for stage in ("NA", "SA"):
+            prev, new = old.get(case, {}).get(stage), stages.get(stage)
+            if (prev and new and new > prev * (1 + threshold)
+                    and new - prev > floor_us):
+                regressions.append(
+                    f"{case}/{stage}: {prev:.0f} -> {new:.0f} us "
+                    f"(+{100 * (new / prev - 1):.0f}%)")
+    for case, stages in parse_characterization(sb).items():
+        for stage in ("NA", "SA"):
+            prev, new = old_char.get(case, {}).get(stage), stages.get(stage)
+            if not prev or not new:
+                continue
+            for metric in ("flops", "hbm_bytes"):
+                if new[metric] > prev[metric] * (1 + threshold):
+                    regressions.append(
+                        f"{case}/{stage} {metric}: {prev[metric]:.3g} -> "
+                        f"{new[metric]:.3g} "
+                        f"(+{100 * (new[metric] / prev[metric] - 1):.0f}%)")
+    if regressions:
+        raise SystemExit("bench regression gate (>"
+                         f"{int(threshold * 100)}% vs {BENCH_JSON.name}): "
+                         + "; ".join(regressions))
+    print(f"# bench regression gate OK (vs {BENCH_JSON.name})", flush=True)
 
 
 def write_bench_json(results: dict) -> None:
@@ -44,19 +124,16 @@ def write_bench_json(results: dict) -> None:
             pass  # rewrite a corrupt baseline from scratch
     sb = results.get("bench_stage_breakdown")
     if sb:
-        breakdown: dict = {}
         for name, us, derived in sb:
-            m = re.fullmatch(r"fig2/(\w+)/(\w+)/(FP|NA|SA)", name)
-            if m:
-                breakdown.setdefault(f"{m.group(1)}/{m.group(2)}", {})[
-                    m.group(3)] = round(us, 1)
-            elif name == "fig2/avg_NA_share":
+            if name == "fig2/avg_NA_share":
                 m2 = re.search(r"avg_na_share=([\d.]+)", derived)
                 if m2:
                     data["avg_na_share_pct"] = float(m2.group(1))
         # merge per case: a BENCH_SMOKE run (one case) must not shrink the
         # committed multi-case baseline
-        data.setdefault("stage_breakdown_us", {}).update(breakdown)
+        data.setdefault("stage_breakdown_us", {}).update(parse_breakdown(sb))
+        data.setdefault("stage_characterization", {}).update(
+            parse_characterization(sb))
     nf = results.get("bench_na_fused")
     if nf:
         fused: dict = {}
@@ -76,7 +153,23 @@ def write_bench_json(results: dict) -> None:
                 m = re.search(r"max_abs_err=([\d.e+-]+)", derived)
                 fused["kernel_max_abs_err"] = float(m.group(1)) if m else None
         data["na_fused"] = fused
-    if sb or nf:
+    se = results.get("bench_sa_epilogue")
+    if se:
+        epi: dict = {}
+        for name, us, derived in se:
+            d = dict(kv.split("=", 1) for kv in derived.split())
+            if name == "sa_epilogue/two_pass":
+                epi["two_pass_us"] = round(us, 1)
+                epi["two_pass_hbm_bytes"] = float(d["hbm_bytes"])
+                epi["z_bytes"] = float(d["z_bytes"])
+            elif name == "sa_epilogue/fused":
+                epi["fused_us"] = round(us, 1)
+                epi["fused_hbm_bytes"] = float(d["hbm_bytes"])
+                epi["z_passes_saved"] = float(d["z_passes_saved"])
+            elif name == "sa_epilogue/kernel_interpret_parity":
+                epi["kernel_max_abs_err"] = float(d["max_abs_err"])
+        data["sa_epilogue"] = epi
+    if sb or nf or se:
         BENCH_JSON.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
         print(f"# wrote {BENCH_JSON.name}", flush=True)
 
@@ -84,7 +177,9 @@ def write_bench_json(results: dict) -> None:
 def main() -> None:
     import importlib
 
-    only = sys.argv[1:] or None
+    argv = sys.argv[1:]
+    check = "--check" in argv
+    only = [a for a in argv if a != "--check"] or None
     print("name,us_per_call,derived")
     failures = 0
     results: dict = {}
@@ -104,6 +199,8 @@ def main() -> None:
             failures += 1
             print(f"# {name} FAILED\n{traceback.format_exc()}", flush=True)
     if not failures:  # never record a partial/failed run as the baseline
+        if check:  # gate against the committed snapshot BEFORE overwriting
+            check_regression(results)
         write_bench_json(results)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")

@@ -160,8 +160,13 @@ class HGNNConfig:
     use_pallas: bool = False
     # Degree-bucketed padded NA layout: >1 bins rows into that many K-caps
     # (core/metapath.py bucket_padded) instead of one K=max_degree pad;
-    # 0/1 keeps the single stacked [P, N, K] layout. Fused path only.
+    # 0/1 keeps the single stacked [P, N, K] layout. Fused path only
+    # (HAN's stacked metapaths and RGCN's per-relation tables).
     degree_buckets: int = 0
+    # Fused NA→SA epilogue (inter-stage data reuse): the semantic-score
+    # pass-1 partial accumulates inside the NA kernel while each z tile is
+    # still in VMEM, saving one full [P, N, D] HBM read. Stacked layout only.
+    fuse_na_sa: bool = False
     seed: int = 0
 
     def replace(self, **kw) -> "HGNNConfig":

@@ -3,26 +3,41 @@
 Two stages only: Aggregation (normalized mean over neighbors) + Combination
 (dense matmul). Used on the Reddit-like graph to contrast with HAN's
 metapath-scaled Neighbor Aggregation.
+
+As a :class:`StagePlan`: FP is the first Combination (``x @ w1`` — mean
+aggregation and the dense matmul commute), NA covers both aggregation
+layers (GCN has no semantic stage: ``sa.kind="none"``), the head is the
+second Combination.
 """
 from __future__ import annotations
 
 from typing import Dict
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import HGNNConfig
 from repro.core import metapath as mp
 from repro.core import stages
 from repro.core.hgraph import HeteroGraph
+from repro.core.pipeline import PlannedModel
+from repro.core.plan import FPSpec, HeadSpec, NASpec, SASpec, StagePlan
 from repro.data.synthetic import DATASET_TARGET
 
 
-class GCN:
+class GCN(PlannedModel):
     def __init__(self, cfg: HGNNConfig):
-        self.cfg = cfg
+        super().__init__(cfg)
         self.target = DATASET_TARGET[cfg.dataset]
+
+    def plan(self) -> StagePlan:
+        return StagePlan(
+            model="gcn",
+            target=self.target,
+            fp=FPSpec(kind="dense"),
+            na=NASpec(kind="gcn", layout="csr", activation="relu"),
+            sa=SASpec(kind="none"),
+            head=HeadSpec(kind="linear", param="w2"),
+        )
 
     def prepare(self, hg: HeteroGraph) -> Dict:
         t = self.target
@@ -35,39 +50,3 @@ class GCN:
             "n_nodes": hg.node_counts[t],
             "feat_dim": hg.feat_dim(t),
         }
-
-    def init(self, rng: jax.Array, batch: Dict) -> Dict:
-        cfg = self.cfg
-        k1, k2 = jax.random.split(rng)
-        d_in, d = batch["feat_dim"], cfg.hidden
-        return {
-            "w1": jax.random.normal(k1, (d_in, d), jnp.float32) / np.sqrt(d_in),
-            "w2": jax.random.normal(k2, (d, cfg.n_classes), jnp.float32) / np.sqrt(d),
-        }
-
-    # Aggregation stage (paper's GNN "Aggregation")
-    def aggregate(self, batch: Dict, x: jax.Array, seg=None, idx=None) -> jax.Array:
-        seg = batch["seg"] if seg is None else seg
-        idx = batch["idx"] if idx is None else idx
-        return stages.mean_aggregate_csr(x, seg, idx, batch["n_nodes"])
-
-    # Combination stage
-    def combine(self, w: jax.Array, h: jax.Array) -> jax.Array:
-        return jax.nn.relu(h @ w)
-
-    def forward(self, params: Dict, batch: Dict) -> jax.Array:
-        h = self.combine(params["w1"], self.aggregate(batch, batch["x"]))
-        return self.aggregate(batch, h) @ params["w2"]
-
-    # stage protocol used by benchmarks (maps onto FP/NA/SA loosely)
-    def fp(self, params, batch):
-        return batch["x"] @ params["w1"]
-
-    def na(self, params, batch, h):
-        return jax.nn.relu(self.aggregate(batch, h))
-
-    def sa(self, params, batch, z):
-        return z  # GCN has no semantic aggregation — single semantic
-
-    def head(self, params, z):
-        return z @ params["w2"]

@@ -2,35 +2,62 @@
 
 Stages (paper Table 1): Metapath Walk | Linear Transformation | GAT | Attention Sum.
 
-Two execution paths:
-  * baseline (``cfg.fused=False``): DGL-faithful — one CSR subgraph per
-    metapath, NA runs per-subgraph (separate kernels, inter-subgraph
-    parallelism NOT exploited), SA stacks the per-metapath results
-    (DR-Type concat).
-  * optimized (``cfg.fused=True``): stacked padded subgraphs ``[P,N,K]``,
-    NA vmapped across metapaths (inter-subgraph parallelism), concat-free SA.
-    With ``cfg.use_pallas`` the NA inner loop runs the Pallas kernel.
+Execution is declared as a :class:`StagePlan` and run by the stage-graph
+executor (:mod:`repro.core.pipeline`); this module only owns the host-side
+Subgraph Build and the plan:
+
+  * baseline (``cfg.fused=False``): NA layout ``csr`` — one CSR subgraph per
+    metapath, separate kernels, SA pays the DR-Type concat.
+  * optimized (``cfg.fused=True``): layout ``stacked`` ``[P, N, K]``
+    (inter-subgraph parallelism, concat-free SA) or ``bucketed`` when
+    ``cfg.degree_buckets > 1``.  ``cfg.use_pallas`` runs the fused GAT-NA
+    kernel; ``cfg.fuse_na_sa`` additionally fuses the SA pass-1 epilogue
+    into the NA kernel (stacked layout only).
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import HGNNConfig
 from repro.core import metapath as mp
-from repro.core import semantics, stages
+from repro.core import stages
 from repro.core.hgraph import HeteroGraph
+from repro.core.pipeline import PlannedModel
+from repro.core.plan import (BUCKETED_BATCH_SPECS, STACKED_BATCH_SPECS,
+                             FPSpec, HeadSpec, NASpec, SASpec, StagePlan)
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
-class HAN:
+class HAN(PlannedModel):
     def __init__(self, cfg: HGNNConfig):
-        self.cfg = cfg
+        super().__init__(cfg)
         self.metapaths = DATASET_METAPATHS[cfg.dataset]
         self.target = DATASET_TARGET[cfg.dataset]
+
+    def plan(self) -> StagePlan:
+        cfg = self.cfg
+        if not cfg.fused:
+            layout = "csr"
+        elif cfg.degree_buckets > 1:
+            layout = "bucketed"
+        else:
+            layout = "stacked"
+        return StagePlan(
+            model="han",
+            target=self.target,
+            fp=FPSpec(kind="per_type", sharded=True, heads=True),
+            na=NASpec(kind="gat", layout=layout, activation="elu",
+                      use_pallas=cfg.use_pallas),
+            sa=SASpec(kind="attention", stacked=cfg.fused,
+                      fuse_epilogue=cfg.fuse_na_sa and layout == "stacked"),
+            head=HeadSpec(kind="linear"),
+            metapaths=tuple(tuple(p) for p in self.metapaths),
+            batch_specs=(BUCKETED_BATCH_SPECS if layout == "bucketed"
+                         else STACKED_BATCH_SPECS),
+        )
 
     # ---------------- Stage 1: Subgraph Build (host) ----------------
     def prepare(self, hg: HeteroGraph) -> Dict:
@@ -46,7 +73,7 @@ class HAN:
             ]
             if cfg.degree_buckets > 1:
                 # degree-bucketed layout: per metapath, rows binned into a
-                # few K-caps (NA dispatch in stages.gat_aggregate_bucketed)
+                # few K-caps (executor dispatches gat_aggregate_bucketed)
                 batch["buckets"] = [
                     [(jnp.asarray(b.row_ids[i]), jnp.asarray(b.nbr[i]),
                       jnp.asarray(b.mask[i])) for i in range(b.n_buckets)]
@@ -66,82 +93,3 @@ class HAN:
             batch["edges"] = edges
         batch["feat_dims"] = {t: hg.feat_dim(t) for t in hg.features}
         return batch
-
-    # ---------------- params ----------------
-    def init(self, rng: jax.Array, batch: Dict) -> Dict:
-        cfg = self.cfg
-        P = len(self.metapaths)
-        d = cfg.hidden
-        head_dim = d // cfg.n_heads
-        k_fp, k_gat, k_sem, k_cls = jax.random.split(rng, 4)
-        gat_keys = jax.random.split(k_gat, P)
-        params = {
-            "fp": stages.init_feature_projection(k_fp, batch["feat_dims"], d),
-            "gat": [stages.init_gat(k, cfg.n_heads, head_dim) for k in gat_keys],
-            "sem": semantics.init_semantic_attention(k_sem, d, cfg.attn_hidden),
-            "cls": jax.random.normal(k_cls, (d, cfg.n_classes), jnp.float32)
-            / np.sqrt(d),
-        }
-        if cfg.fused and cfg.degree_buckets <= 1:
-            # stacked per-metapath attention params for the one-launch path
-            # (bucketed layout keeps the per-metapath list: no uniform stack)
-            params["gat"] = jax.tree.map(lambda *xs: jnp.stack(xs), *params["gat"])
-        return params
-
-    # ---------------- Stage 2: Feature Projection ----------------
-    def fp(self, params: Dict, batch: Dict) -> jax.Array:
-        # stage-aware sharded FP (DM-Type): no-op off-mesh
-        h = stages.feature_projection_sharded(params["fp"], batch["feats"])
-        ht = h[self.target]
-        n = ht.shape[0]
-        return ht.reshape(n, self.cfg.n_heads, -1)  # [N, H, Dh]
-
-    # ---------------- Stage 3: Neighbor Aggregation ----------------
-    def na(self, params: Dict, batch: Dict, h: jax.Array):
-        cfg = self.cfg
-        if cfg.fused:
-            if cfg.use_pallas:
-                from repro.kernels import ops as kops
-            if "buckets" in batch:  # degree-bucketed dispatch (per metapath)
-                agg_fn = None
-                if cfg.use_pallas:
-                    agg_fn = lambda p, hd, hs, nn, mm: kops.gat_aggregate(
-                        p, hd, hs, nn, mm, use_pallas=True)
-                z = jnp.stack([
-                    stages.gat_aggregate_bucketed(p_i, h, h, bks, agg_fn=agg_fn)
-                    for p_i, bks in zip(params["gat"], batch["buckets"])
-                ])  # [P, N, H, Dh]
-            else:
-                stacked_fn = None
-                if cfg.use_pallas:
-                    # ONE fused kernel launch for the whole [P, N, K] stack
-                    stacked_fn = lambda pp, hd, hs, nn, mm: (
-                        kops.gat_aggregate_stacked(pp, hd, hs, nn, mm,
-                                                   use_pallas=True))
-                z = stages.gat_aggregate_padded_stacked(
-                    params["gat"], h, batch["nbr"], batch["mask"],
-                    stacked_fn=stacked_fn)
-            z = jax.nn.elu(z)  # [P, N, H, Dh]
-            return z.reshape(z.shape[0], z.shape[1], -1)  # [P, N, D]
-        # baseline: independent kernels per subgraph (the paper's Fig. 5c timeline)
-        outs: List[jax.Array] = []
-        for p_i, (seg, idx) in zip(params["gat"], batch["edges"]):
-            z = stages.gat_aggregate_csr(p_i, h, h, seg, idx, batch["n_nodes"])
-            outs.append(jax.nn.elu(z).reshape(z.shape[0], -1))
-        return outs  # list of [N, D]
-
-    # ---------------- Stage 4: Semantic Aggregation ----------------
-    def sa(self, params: Dict, batch: Dict, z) -> jax.Array:
-        if self.cfg.fused:
-            # SA rides the NA layout: [P, N, D] with nodes over BATCH
-            z = stages.shard(z, *stages.HGNN_STAGE_SPECS["sa_stacked"])
-            return semantics.semantic_attention(params["sem"], z)
-        return semantics.semantic_attention_list(params["sem"], z)
-
-    def head(self, params: Dict, z: jax.Array) -> jax.Array:
-        return z @ params["cls"]
-
-    def forward(self, params: Dict, batch: Dict) -> jax.Array:
-        h = self.fp(params, batch)
-        z = self.na(params, batch, h)
-        return self.head(params, self.sa(params, batch, z))

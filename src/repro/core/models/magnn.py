@@ -7,27 +7,47 @@ instance is encoded from the projected features of ALL nodes along the path
 
 Instance enumeration is sampled (cap per target node) — full enumeration
 explodes through hub nodes (DBLP's 20 venues); see core/metapath.py.
+
+Execution is declared as a :class:`StagePlan` with NA layout ``instances``;
+the per-position node types are static and ride the plan (``metapaths``), so
+the device batch holds arrays only and the instance tables shard over the
+stage-aware destination-node BATCH axes.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import HGNNConfig
 from repro.core import metapath as mp
-from repro.core import semantics, stages
 from repro.core.hgraph import HeteroGraph
+from repro.core.pipeline import PlannedModel
+from repro.core.plan import (INSTANCE_BATCH_SPECS, FPSpec, HeadSpec, NASpec,
+                             SASpec, StagePlan)
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
-class MAGNN:
+class MAGNN(PlannedModel):
     def __init__(self, cfg: HGNNConfig):
-        self.cfg = cfg
+        super().__init__(cfg)
         self.metapaths = DATASET_METAPATHS[cfg.dataset]
         self.target = DATASET_TARGET[cfg.dataset]
+
+    def plan(self) -> StagePlan:
+        cfg = self.cfg
+        return StagePlan(
+            model="magnn",
+            target=self.target,
+            fp=FPSpec(kind="per_type", sharded=False),
+            na=NASpec(kind="instance", layout="instances", activation="elu",
+                      use_pallas=cfg.use_pallas),
+            sa=SASpec(kind="attention", stacked=False),
+            head=HeadSpec(kind="linear"),
+            metapaths=tuple(tuple(p) for p in self.metapaths),
+            batch_specs=INSTANCE_BATCH_SPECS,
+        )
 
     # ---------------- Stage 1: Subgraph Build (host, sampled instances) -----
     def prepare(self, hg: HeteroGraph) -> Dict:
@@ -40,67 +60,9 @@ class MAGNN:
         return {
             "feats": {t: jnp.asarray(f) for t, f in hg.features.items()},
             "feat_dims": {t: hg.feat_dim(t) for t in hg.features},
+            # node types per path position are static (plan.metapaths)
             "instances": [
-                (jnp.asarray(ib.nodes), jnp.asarray(ib.mask), ib.types) for ib in insts
+                (jnp.asarray(ib.nodes), jnp.asarray(ib.mask)) for ib in insts
             ],
             "n_nodes": hg.node_counts[self.target],
         }
-
-    def init(self, rng: jax.Array, batch: Dict) -> Dict:
-        cfg = self.cfg
-        d, H = cfg.hidden, cfg.n_heads
-        head_dim = d // H
-        k_fp, k_att, k_sem, k_cls = jax.random.split(rng, 4)
-        att_ks = jax.random.split(k_att, len(self.metapaths))
-        return {
-            "fp": stages.init_feature_projection(k_fp, batch["feat_dims"], d),
-            "att": [stages.init_instance_attention(k, H, head_dim) for k in att_ks],
-            "sem": semantics.init_semantic_attention(k_sem, d, cfg.attn_hidden),
-            "cls": jax.random.normal(k_cls, (d, cfg.n_classes), jnp.float32)
-            / np.sqrt(d),
-        }
-
-    # ---------------- Stage 2: Feature Projection ----------------
-    def fp(self, params: Dict, batch: Dict) -> Dict[str, jax.Array]:
-        return stages.feature_projection(params["fp"], batch["feats"])
-
-    # ---------------- Stage 3: NA over metapath instances ----------------
-    def na(self, params: Dict, batch: Dict, h: Dict[str, jax.Array]) -> List[jax.Array]:
-        cfg = self.cfg
-        H = cfg.n_heads
-        outs: List[jax.Array] = []
-        for p_i, (nodes, mask, types) in zip(params["att"], batch["instances"]):
-            n, i, l = nodes.shape
-            # gather projected features per path position (types known statically)
-            h_path = jnp.stack(
-                [h[types[j]][nodes[:, :, j]] for j in range(l)], axis=2
-            )  # [N, I, L, D]
-            h_path = h_path.reshape(n, i, l, H, -1)
-            enc = stages.rotate_encoder(h_path)  # [N, I, H, Dh]
-            h_tgt = h[self.target].reshape(-1, H, h_path.shape[-1])
-            if cfg.use_pallas:
-                # Instance attention IS padded GAT NA with the encoded
-                # instances as the source pool: node n's instances live at
-                # rows [n*I, (n+1)*I) of the flattened table, so the fused
-                # kernel covers MAGNN with an arange neighbor grid.
-                from repro.kernels import ops as kops
-
-                flat = enc.reshape(n * i, H, enc.shape[-1])
-                nbr_inst = jnp.arange(n * i, dtype=jnp.int32).reshape(n, i)
-                z = kops.gat_aggregate(p_i, h_tgt, flat, nbr_inst, mask,
-                                       use_pallas=True)
-            else:
-                z = stages.instance_aggregate(p_i, h_tgt, enc, mask)
-            outs.append(jax.nn.elu(z).reshape(n, -1))  # [N, D]
-        return outs
-
-    # ---------------- Stage 4: Semantic Aggregation ----------------
-    def sa(self, params: Dict, batch: Dict, z: List[jax.Array]) -> jax.Array:
-        return semantics.semantic_attention_list(params["sem"], z)
-
-    def head(self, params: Dict, z: jax.Array) -> jax.Array:
-        return z @ params["cls"]
-
-    def forward(self, params: Dict, batch: Dict) -> jax.Array:
-        h = self.fp(params, batch)
-        return self.head(params, self.sa(params, batch, self.na(params, batch, h)))

@@ -5,26 +5,52 @@ The early-stage HGNN: Semantic Aggregation is a plain sum (Reduce kernel,
 memory-bound only — §4.4 of the paper).
 
 Updates every node type: h'_d = act(W_0 h_d + Σ_{r: s->d} mean_{N_r}(h_s) W_r).
+
+Execution is declared as a :class:`StagePlan`: NA layout ``csr`` (baseline),
+``padded`` (``cfg.fused``), or ``bucketed`` (``cfg.degree_buckets > 1`` —
+the per-relation tables ride the same degree-bucket dispatch as HAN, with
+``agg_fn=mean``).
 """
 from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import HGNNConfig
-from repro.core import semantics, stages
+from repro.core import metapath as mp
+from repro.core import stages
 from repro.core.hgraph import HeteroGraph
+from repro.core.pipeline import PlannedModel
+from repro.core.plan import (RELATION_BATCH_SPECS, FPSpec, HeadSpec, NASpec,
+                             SASpec, StagePlan)
 from repro.data.synthetic import DATASET_TARGET
 
 
-class RGCN:
+class RGCN(PlannedModel):
     def __init__(self, cfg: HGNNConfig):
-        self.cfg = cfg
+        super().__init__(cfg)
         self.target = DATASET_TARGET[cfg.dataset]
         self.rel_keys: List[Tuple[str, str, str]] = []
+
+    def plan(self) -> StagePlan:
+        cfg = self.cfg
+        if not cfg.fused:
+            layout = "csr"
+        elif cfg.degree_buckets > 1:
+            layout = "bucketed"
+        else:
+            layout = "padded"
+        return StagePlan(
+            model="rgcn",
+            target=self.target,
+            fp=FPSpec(kind="per_type", sharded=True),
+            na=NASpec(kind="mean", layout=layout, use_pallas=cfg.use_pallas),
+            sa=SASpec(kind="rel_sum"),
+            head=HeadSpec(kind="select_linear", target=self.target),
+            batch_specs=RELATION_BATCH_SPECS,
+        )
 
     # ---------------- Stage 1: Relation Walk (host) ----------------
     def prepare(self, hg: HeteroGraph) -> Dict:
@@ -42,8 +68,6 @@ class RGCN:
             # incoming edges to type d from type s
             adj_in = hg.relations[key].T.tocsr()
             if cfg.fused:
-                import scipy.sparse as sp
-
                 nbr = np.zeros((adj_in.shape[0], cfg.max_degree), np.int32)
                 mask = np.zeros((adj_in.shape[0], cfg.max_degree), np.float32)
                 indptr, indices = adj_in.indptr, adj_in.indices
@@ -53,82 +77,20 @@ class RGCN:
                         nbrs = rng.choice(nbrs, cfg.max_degree, replace=False)
                     nbr[u, : len(nbrs)] = nbrs
                     mask[u, : len(nbrs)] = 1.0
-                batch["rels"][key] = (jnp.asarray(nbr), jnp.asarray(mask))
+                if cfg.degree_buckets > 1:
+                    # degree-bucketed per-relation tables (open ROADMAP item):
+                    # same quantile K-caps as HAN, scattered back via row_ids
+                    bk = mp.bucket_padded(
+                        mp.PaddedSubgraph(nbr, mask, [s, d]),
+                        cfg.degree_buckets)
+                    batch["rels"][key] = [
+                        (jnp.asarray(bk.row_ids[i]), jnp.asarray(bk.nbr[i]),
+                         jnp.asarray(bk.mask[i]))
+                        for i in range(bk.n_buckets)
+                    ]
+                else:
+                    batch["rels"][key] = (jnp.asarray(nbr), jnp.asarray(mask))
             else:
                 seg, idx = stages.csr_to_edges(adj_in.indptr, adj_in.indices)
                 batch["rels"][key] = (jnp.asarray(seg), jnp.asarray(idx))
         return batch
-
-    def init(self, rng: jax.Array, batch: Dict) -> Dict:
-        cfg = self.cfg
-        d = cfg.hidden
-        k_fp, k_rel, k_self, k_cls = jax.random.split(rng, 4)
-        rel_ks = jax.random.split(k_rel, max(len(self.rel_keys), 1))
-        self_ks = jax.random.split(k_self, len(batch["counts"]))
-        return {
-            # per-type input projection (raw dims differ across types)
-            "fp": stages.init_feature_projection(k_fp, batch["feat_dims"], d),
-            # per-relation transform W_r
-            "w_rel": {
-                key: jax.random.normal(k, (d, d), jnp.float32) / np.sqrt(d)
-                for key, k in zip(self.rel_keys, rel_ks)
-            },
-            # self-loop W_0 per type
-            "w_self": {
-                t: jax.random.normal(k, (d, d), jnp.float32) / np.sqrt(d)
-                for t, k in zip(sorted(batch["counts"]), self_ks)
-            },
-            "cls": jax.random.normal(k_cls, (d, cfg.n_classes), jnp.float32)
-            / np.sqrt(d),
-        }
-
-    # ---------------- Stage 2: Feature Projection ----------------
-    def fp(self, params: Dict, batch: Dict) -> Dict[str, jax.Array]:
-        # stage-aware sharded FP (DM-Type): no-op off-mesh
-        return stages.feature_projection_sharded(params["fp"], batch["feats"])
-
-    # ---------------- Stage 3: Neighbor Aggregation (mean, per relation) ----
-    def na(self, params: Dict, batch: Dict, h: Dict[str, jax.Array]):
-        # string keys keep the pytree sortable ("__h__" rides along for the
-        # self-loop term in Semantic Aggregation)
-        out: Dict = {"__h__": h}
-        for key in self.rel_keys:
-            s, r, d = key
-            a, b = batch["rels"][key]
-            if self.cfg.fused:
-                agg_fn = None
-                if self.cfg.use_pallas:
-                    # Pallas segment-SpMM on the TB-Type hot loop; streams
-                    # the source table from HBM when it exceeds VMEM.
-                    from repro.kernels import ops as kops
-
-                    agg_fn = lambda hs, nn, mm: kops.segment_spmm(
-                        hs, nn, mm, mean=True, use_pallas=True)
-                # stage-aware sharded NA (no-op off-mesh)
-                agg = stages.mean_aggregate_padded_sharded(h[s], a, b,
-                                                           agg_fn=agg_fn)
-            else:
-                agg = stages.mean_aggregate_csr(h[s], a, b, batch["counts"][d])
-            out["|".join(key)] = agg @ params["w_rel"][key]
-        return out
-
-    # ---------------- Stage 4: Semantic Aggregation (sum across relations) --
-    def sa(self, params: Dict, batch: Dict, z) -> Dict[str, jax.Array]:
-        h = z["__h__"]
-        h_new: Dict[str, jax.Array] = {}
-        for t in batch["counts"]:
-            acc = None
-            for key, v in z.items():
-                if key != "__h__" and key.split("|")[2] == t:
-                    acc = v if acc is None else acc + v  # Reduce (sum)
-            h_self = h[t] @ params["w_self"][t]
-            h_new[t] = jax.nn.relu(h_self if acc is None else h_self + acc)
-        return h_new
-
-    def head(self, params: Dict, z: Dict[str, jax.Array]) -> jax.Array:
-        return z[self.target] @ params["cls"]
-
-    def forward(self, params: Dict, batch: Dict) -> jax.Array:
-        h = self.fp(params, batch)
-        z = self.na(params, batch, h)
-        return self.head(params, self.sa(params, batch, z))

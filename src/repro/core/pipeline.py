@@ -1,0 +1,389 @@
+"""The stage-graph executor: one interpreter for every :class:`StagePlan`.
+
+Model classes used to own the dispatch ladder (baseline CSR vs fused
+resident vs streaming vs bucketed vs sharded vs pallas-vs-ref) — three
+copies of it, one per HGNN.  Here it lives once: the executor resolves
+layout, kernel dispatch, sharding constraints and interpret/pallas mode from
+the plan, and the models shrink to host-side ``prepare()`` plus a plan
+builder (:class:`PlannedModel`).
+
+The executor also owns the paper's two structural optimizations:
+
+* **Fused NA→SA epilogue** (``plan.sa.fuse_epilogue``): on the stacked
+  layout the semantic-score pass-1 partial (``mean_n q·tanh(z W + b)``)
+  accumulates inside the NA kernel while each ``z`` tile is in VMEM —
+  one full ``[P, N, D]`` HBM read disappears, and SA degenerates to a
+  softmax over ``P`` plus the weighted combine (exactly one ``z`` read).
+* **Per-stage characterization records** (:meth:`stage_records`): every
+  stage function is lowered and walked by ``core/characterize.py``, so
+  benchmarks report the paper's Fig. 3-style breakdown from the same code
+  path that serves traffic.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import semantics, stages
+from repro.core.plan import StagePlan
+
+_ACT = {None: lambda x: x, "elu": jax.nn.elu, "relu": jax.nn.relu}
+
+
+def _kops():
+    """Kernel dispatch goes through the module attribute so tests can
+    monkeypatch wrappers into interpret mode."""
+    from repro.kernels import ops
+
+    return ops
+
+
+class StageGraphExecutor:
+    """Executes a :class:`StagePlan` over a prepared device batch."""
+
+    def __init__(self, plan: StagePlan, cfg):
+        self.plan = plan
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+    def init(self, rng: jax.Array, batch: Dict) -> Dict:
+        cfg, plan = self.cfg, self.plan
+        d = cfg.hidden
+        if plan.na.kind == "gcn":
+            k1, k2 = jax.random.split(rng)
+            d_in = batch["feat_dim"]
+            return {
+                "w1": jax.random.normal(k1, (d_in, d), jnp.float32) / np.sqrt(d_in),
+                "w2": jax.random.normal(k2, (d, cfg.n_classes), jnp.float32)
+                / np.sqrt(d),
+            }
+        k_fp, k_na, k_sem, k_cls = jax.random.split(rng, 4)
+        params: Dict = {
+            "fp": stages.init_feature_projection(k_fp, batch["feat_dims"], d),
+            "cls": jax.random.normal(k_cls, (d, cfg.n_classes), jnp.float32)
+            / np.sqrt(d),
+        }
+        head_dim = d // cfg.n_heads
+        if plan.na.kind == "gat":
+            keys = jax.random.split(k_na, len(plan.metapaths))
+            gat = [stages.init_gat(k, cfg.n_heads, head_dim) for k in keys]
+            if plan.na.layout == "stacked":
+                # one stacked param set -> ONE kernel launch for the stack
+                # (bucketed keeps the per-metapath list: no uniform K)
+                gat = jax.tree.map(lambda *xs: jnp.stack(xs), *gat)
+            params["gat"] = gat
+            params["sem"] = semantics.init_semantic_attention(
+                k_sem, d, cfg.attn_hidden)
+        elif plan.na.kind == "instance":
+            keys = jax.random.split(k_na, len(plan.metapaths))
+            params["att"] = [
+                stages.init_instance_attention(k, cfg.n_heads, head_dim)
+                for k in keys
+            ]
+            params["sem"] = semantics.init_semantic_attention(
+                k_sem, d, cfg.attn_hidden)
+        elif plan.na.kind == "mean":
+            rel_keys = sorted(batch["rels"])
+            rel_ks = jax.random.split(k_na, max(len(rel_keys), 1))
+            self_ks = jax.random.split(k_sem, len(batch["counts"]))
+            params["w_rel"] = {
+                key: jax.random.normal(k, (d, d), jnp.float32) / np.sqrt(d)
+                for key, k in zip(rel_keys, rel_ks)
+            }
+            params["w_self"] = {
+                t: jax.random.normal(k, (d, d), jnp.float32) / np.sqrt(d)
+                for t, k in zip(sorted(batch["counts"]), self_ks)
+            }
+        return params
+
+    # ------------------------------------------------------------------
+    # Stage 2: Feature Projection
+    # ------------------------------------------------------------------
+    def fp(self, params: Dict, batch: Dict):
+        plan = self.plan
+        if plan.fp.kind == "dense":
+            return batch["x"] @ params["w1"]
+        project = (stages.feature_projection_sharded if plan.fp.sharded
+                   else stages.feature_projection)
+        h = project(params["fp"], batch["feats"])
+        if plan.fp.heads:
+            ht = h[plan.target]
+            return ht.reshape(ht.shape[0], self.cfg.n_heads, -1)  # [N, H, Dh]
+        return h
+
+    # ------------------------------------------------------------------
+    # Stage 3: Neighbor Aggregation
+    # ------------------------------------------------------------------
+    def na(self, params: Dict, batch: Dict, h):
+        kind = self.plan.na.kind
+        if kind == "gat":
+            return self._na_gat(params, batch, h)
+        if kind == "mean":
+            return self._na_mean(params, batch, h)
+        if kind == "instance":
+            return self._na_instance(params, batch, h)
+        if kind == "gcn":
+            # both GCN aggregation layers are NA work (the paper's GNN
+            # comparison has no semantic stage); the segment count comes
+            # from h's static shape so the forward stays jit-able with the
+            # batch as an argument (batch["n_nodes"] would be a tracer)
+            z = jax.nn.relu(stages.mean_aggregate_csr(
+                h, batch["seg"], batch["idx"], h.shape[0]))
+            return stages.mean_aggregate_csr(
+                z, batch["seg"], batch["idx"], z.shape[0])
+        raise ValueError(f"unknown NA kind {kind!r}")
+
+    def _na_gat(self, params: Dict, batch: Dict, h: jax.Array):
+        plan, cfg = self.plan, self.cfg
+        act = _ACT[plan.na.activation]
+        if plan.na.layout == "csr":
+            # baseline: independent kernels per subgraph (paper Fig. 5c).
+            # h [N, H, Dh] covers the target nodes, so its static leading
+            # dim is the segment count (jit-safe: batch["n_nodes"] traces).
+            outs: List[jax.Array] = []
+            for p_i, (seg, idx) in zip(params["gat"], batch["edges"]):
+                z = stages.gat_aggregate_csr(p_i, h, h, seg, idx, h.shape[0])
+                outs.append(act(z).reshape(z.shape[0], -1))
+            return outs  # list of [N, D]
+        if plan.na.layout == "bucketed":
+            agg_fn = None
+            if plan.na.use_pallas:
+                kops = _kops()
+                agg_fn = lambda p, hd, hs, nn, mm: kops.gat_aggregate(
+                    p, hd, hs, nn, mm, use_pallas=True)
+            z = jnp.stack([
+                stages.gat_aggregate_bucketed(p_i, h, h, bks, agg_fn=agg_fn)
+                for p_i, bks in zip(params["gat"], batch["buckets"])
+            ])  # [P, N, H, Dh]
+            z = act(z)
+            return z.reshape(z.shape[0], z.shape[1], -1)  # [P, N, D]
+        # stacked layout: ONE launch for the whole [P, N, K] stack
+        if plan.sa.fuse_epilogue:
+            return self._na_gat_fused_sa(params, batch, h)
+        stacked_fn = None
+        if plan.na.use_pallas:
+            kops = _kops()
+            stacked_fn = lambda pp, hd, hs, nn, mm: kops.gat_aggregate_stacked(
+                pp, hd, hs, nn, mm, use_pallas=True)
+        z = stages.gat_aggregate_padded_stacked(
+            params["gat"], h, batch["nbr"], batch["mask"],
+            stacked_fn=stacked_fn)
+        z = act(z)
+        return z.reshape(z.shape[0], z.shape[1], -1)  # [P, N, D]
+
+    def _na_gat_fused_sa(self, params: Dict, batch: Dict, h: jax.Array):
+        """Stacked NA with the SA pass-1 epilogue fused in: returns
+        ``(z [P, N, D] activation applied, wp [P] semantic-score means)``."""
+        if self.plan.na.activation != "elu":
+            # the kernel epilogue bakes the NA activation in (elu); a plan
+            # declaring another activation would silently diverge
+            raise ValueError("sa.fuse_epilogue requires na.activation='elu' "
+                             f"(got {self.plan.na.activation!r})")
+        kops = _kops()
+        specs = stages.HGNN_STAGE_SPECS
+        h_src = stages.shard(h, *specs["na_src"])
+        nbr = stages.shard(batch["nbr"], None, *specs["na_nbr"])
+        mask = stages.shard(batch["mask"], None, *specs["na_nbr"])
+        z4, wp = kops.gat_aggregate_stacked_fused_sa(
+            params["gat"], h, h_src, nbr, mask, params["sem"],
+            use_pallas=self.plan.na.use_pallas)
+        z4 = stages.shard(z4, None, *specs["na_out"])
+        return z4.reshape(z4.shape[0], z4.shape[1], -1), wp
+
+    def _na_mean(self, params: Dict, batch: Dict, h: Dict[str, jax.Array]):
+        plan = self.plan
+        # "__h__" rides along for the self-loop term in SA (rel_sum)
+        out: Dict = {"__h__": h}
+        agg_fn = None
+        if plan.na.use_pallas and plan.na.layout != "csr":
+            kops = _kops()
+            agg_fn = lambda hs, nn, mm: kops.segment_spmm(
+                hs, nn, mm, mean=True, use_pallas=True)
+        for key in sorted(batch["rels"]):
+            s, r, d = key
+            rel = batch["rels"][key]
+            if plan.na.layout == "csr":
+                # h[d]'s static leading dim is the destination-type count
+                # (jit-safe: batch["counts"] values trace)
+                agg = stages.mean_aggregate_csr(h[s], rel[0], rel[1],
+                                                h[d].shape[0])
+            elif plan.na.layout == "bucketed":
+                # bucket row_ids partition the destination rows, so the row
+                # count is static even when batch["counts"] rides a tracer
+                n_rows = sum(b[0].shape[0] for b in rel)
+                agg = stages.mean_aggregate_bucketed(
+                    h[s], rel, n_rows, agg_fn=agg_fn)
+            else:  # padded
+                agg = stages.mean_aggregate_padded_sharded(
+                    h[s], rel[0], rel[1], agg_fn=agg_fn)
+            out["|".join(key)] = agg @ params["w_rel"][key]
+        return out
+
+    def _na_instance(self, params: Dict, batch: Dict, h: Dict[str, jax.Array]):
+        plan, cfg = self.plan, self.cfg
+        specs = stages.HGNN_STAGE_SPECS
+        H = cfg.n_heads
+        act = _ACT[plan.na.activation]
+        outs: List[jax.Array] = []
+        for p_i, (nodes, mask), types in zip(params["att"],
+                                             batch["instances"],
+                                             plan.metapaths):
+            nodes = stages.shard(nodes, *specs["na_inst_nodes"])
+            mask = stages.shard(mask, *specs["na_nbr"])
+            n, i, l = nodes.shape
+            # gather projected features per path position (types are static,
+            # carried by the plan)
+            h_path = jnp.stack(
+                [h[types[j]][nodes[:, :, j]] for j in range(l)], axis=2
+            )  # [N, I, L, D]
+            h_path = h_path.reshape(n, i, l, H, -1)
+            enc = stages.rotate_encoder(h_path)  # [N, I, H, Dh]
+            h_tgt = h[plan.target].reshape(-1, H, h_path.shape[-1])
+            if plan.na.use_pallas:
+                # Instance attention IS padded GAT NA with the encoded
+                # instances as the source pool (arange neighbor grid).
+                kops = _kops()
+                flat = enc.reshape(n * i, H, enc.shape[-1])
+                nbr_inst = jnp.arange(n * i, dtype=jnp.int32).reshape(n, i)
+                z = kops.gat_aggregate(p_i, h_tgt, flat, nbr_inst, mask,
+                                       use_pallas=True)
+            else:
+                z = stages.instance_aggregate(p_i, h_tgt, enc, mask)
+            z = act(z).reshape(n, -1)
+            outs.append(stages.shard(z, *specs["na_flat_out"]))  # [N, D]
+        return outs
+
+    # ------------------------------------------------------------------
+    # Stage 4: Semantic Aggregation
+    # ------------------------------------------------------------------
+    def sa(self, params: Dict, batch: Dict, z):
+        plan = self.plan
+        if plan.sa.kind == "none":
+            return z
+        if plan.sa.kind == "rel_sum":
+            h = z["__h__"]
+            h_new: Dict[str, jax.Array] = {}
+            for t in batch["counts"]:
+                acc = None
+                for key, v in z.items():
+                    if key != "__h__" and key.split("|")[2] == t:
+                        acc = v if acc is None else acc + v  # Reduce (sum)
+                h_self = h[t] @ params["w_self"][t]
+                h_new[t] = jax.nn.relu(h_self if acc is None else h_self + acc)
+            return h_new
+        # attention
+        if isinstance(z, tuple):  # fused NA→SA epilogue: (z, pass-1 scores)
+            z_stack, wp = z
+            beta = jax.nn.softmax(wp)  # O(P) softmax
+            # pass 2 (combine) is the only remaining full read of z
+            return _kops().semantic_combine(z_stack, beta,
+                                            use_pallas=plan.na.use_pallas)
+        if plan.sa.stacked:
+            z = stages.shard(z, *stages.HGNN_STAGE_SPECS["sa_stacked"])
+            return semantics.semantic_attention(params["sem"], z)
+        return semantics.semantic_attention_list(params["sem"], z)
+
+    # ------------------------------------------------------------------
+    # head + forward
+    # ------------------------------------------------------------------
+    def head(self, params: Dict, z) -> jax.Array:
+        plan = self.plan
+        w = params[plan.head.param]
+        if plan.head.kind == "select_linear":
+            return z[plan.head.target] @ w
+        return z @ w
+
+    def forward(self, params: Dict, batch: Dict) -> jax.Array:
+        h = self.fp(params, batch)
+        z = self.na(params, batch, h)
+        return self.head(params, self.sa(params, batch, z))
+
+    # ------------------------------------------------------------------
+    # per-stage characterization hooks
+    # ------------------------------------------------------------------
+    def stage_fns(self, params: Dict, batch: Dict) -> Dict[str, Tuple]:
+        """Jitted per-stage callables chained on concrete intermediates —
+        the separate jit per stage mirrors DGL's separate kernel launches
+        and exposes the NA→SA barrier (paper Fig. 5c)."""
+        fp = jax.jit(lambda p: self.fp(p, batch))
+        h = fp(params)
+        na = jax.jit(lambda p, hh: self.na(p, batch, hh))
+        z = na(params, h)
+        sa = jax.jit(lambda p, zz: self.sa(p, batch, zz))
+        out = sa(params, z)
+        head = jax.jit(lambda p, oo: self.head(p, oo))
+        return {"FP": (fp, (params,)), "NA": (na, (params, h)),
+                "SA": (sa, (params, z)), "head": (head, (params, out))}
+
+    def stage_records(self, params: Dict, batch: Dict,
+                      n_chips: int = 1) -> Dict:
+        """Per-stage characterization: stage name → FLOPs / HBM bytes /
+        roofline terms via ``core/characterize.py``, from the exact stage
+        functions the executor serves.  ``total`` is the stage-additive sum
+        (the fully-jitted forward may fuse across stage boundaries, so the
+        per-stage attribution is the meaningful decomposition)."""
+        from repro.core.characterize import analyze_hlo_text, roofline
+
+        recs: Dict[str, Dict] = {}
+        for name, (fn, args) in self.stage_fns(params, batch).items():
+            rep = analyze_hlo_text(fn.lower(*args).compile().as_text())
+            recs[name] = {
+                "flops": rep["total_flops"],
+                "hbm_bytes": rep["total_hbm_bytes"],
+                "flops_by_class": rep["flops_by_class"],
+                "hbm_bytes_by_class": rep["hbm_bytes_by_class"],
+                "roofline": roofline(rep, n_chips, 0.0),
+            }
+        total = {
+            "flops": sum(r["flops"] for r in recs.values()),
+            "hbm_bytes": sum(r["hbm_bytes"] for r in recs.values()),
+        }
+        return {"stages": recs, "total": total}
+
+
+class PlannedModel:
+    """Base for the model zoo: host-side ``prepare()`` + a ``plan()``
+    builder; every device-side stage delegates to the shared executor."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def plan(self) -> StagePlan:
+        raise NotImplementedError
+
+    @property
+    def executor(self) -> StageGraphExecutor:
+        ex = self.__dict__.get("_executor")
+        if ex is None:
+            ex = self.__dict__["_executor"] = StageGraphExecutor(
+                self.plan(), self.cfg)
+        return ex
+
+    def prepare(self, hg) -> Dict:
+        raise NotImplementedError
+
+    def init(self, rng: jax.Array, batch: Dict) -> Dict:
+        return self.executor.init(rng, batch)
+
+    def fp(self, params: Dict, batch: Dict):
+        return self.executor.fp(params, batch)
+
+    def na(self, params: Dict, batch: Dict, h):
+        return self.executor.na(params, batch, h)
+
+    def sa(self, params: Dict, batch: Dict, z):
+        return self.executor.sa(params, batch, z)
+
+    def head(self, params: Dict, z):
+        return self.executor.head(params, z)
+
+    def forward(self, params: Dict, batch: Dict) -> jax.Array:
+        return self.executor.forward(params, batch)
+
+    def stage_records(self, params: Dict, batch: Dict, n_chips: int = 1):
+        return self.executor.stage_records(params, batch, n_chips=n_chips)

@@ -1,0 +1,131 @@
+"""Declarative stage plans — each HGNN model's execution as *data*.
+
+The paper's central observation is that every HGNN is the same four-stage
+pipeline (Subgraph Build → FP → NA → SA) with per-stage execution patterns
+(DM / TB / EW / DR).  Before this module, each model class re-implemented
+the same dispatch ladder (baseline CSR vs fused resident vs streaming vs
+bucketed vs sharded vs pallas-vs-ref) inside its ``fp``/``na``/``sa``
+methods.  A :class:`StagePlan` lifts all of those choices into a frozen
+dataclass; one executor (:mod:`repro.core.pipeline`) interprets it.
+
+Plan fields double as the sharding contract: ``batch_specs`` /
+``param_specs`` are declarative (leaf-name, ndim) → logical-spec tables that
+``launch/serve.py`` resolves into :class:`NamedSharding`s — no model-specific
+branches in the serving layer either.
+
+Layout / kind vocabulary (the executor's dispatch table):
+
+====== =========== ==================================================
+field  value       meaning
+====== =========== ==================================================
+na.kind   gat        multi-head GAT attention (HAN)
+          mean       per-relation mean (RGCN)
+          instance   metapath-instance attention (MAGNN)
+          gcn        homogeneous 2-layer mean aggregation (GCN)
+na.layout csr        DGL-faithful flat edge lists (baseline)
+          stacked    padded ``[P, N, K]`` stack, one launch / metapath stack
+          bucketed   degree-bucketed padded tiles (per metapath / relation)
+          padded     padded ``[N, K]`` per relation (RGCN fused)
+          instances  sampled ``[N, I, L]`` instance tables (MAGNN)
+sa.kind   attention  HAN-style semantic attention over the stack
+          rel_sum    RGCN sum across relations + self loop
+          none       single semantic — identity
+====== =========== ==================================================
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.dist.sharding import BATCH, MODEL
+
+# (leaf-or-container key, ndim, logical per-dim spec): a batch/param pytree
+# leaf whose dict path contains `key` and whose rank is `ndim` gets the spec;
+# everything else replicates.  Resolved by `launch/serve.py:hgnn_shardings`.
+ShardRule = Tuple[str, int, Tuple]
+
+
+@dataclass(frozen=True)
+class FPSpec:
+    """Stage 2 — Feature Projection (DM-Type dense matmul)."""
+
+    kind: str = "per_type"  # per_type (dict of projections) | dense (single W)
+    sharded: bool = True  # stage-aware shard constraints (no-op off-mesh)
+    heads: bool = False  # reshape the target type to [N, H, Dh]
+
+
+@dataclass(frozen=True)
+class NASpec:
+    """Stage 3 — Neighbor Aggregation (TB-Type gather + EW attention math)."""
+
+    kind: str  # gat | mean | instance | gcn
+    layout: str  # csr | stacked | bucketed | padded | instances
+    activation: Optional[str] = None  # elu | relu | None (post-aggregation)
+    use_pallas: bool = False  # fused Pallas kernels on the hot loop
+
+
+@dataclass(frozen=True)
+class SASpec:
+    """Stage 4 — Semantic Aggregation (EW/Reduce; DR concat in the baseline)."""
+
+    kind: str  # attention | rel_sum | none
+    stacked: bool = True  # concat-free [P, N, D] input vs per-metapath list
+    # Fused NA→SA epilogue (paper guideline: inter-stage data reuse): the
+    # semantic-score pass-1 partial accumulates inside the NA kernel while
+    # each z tile is still in VMEM, eliminating one full [P, N, D] HBM read.
+    # The executor honours it only on the stacked layout.
+    fuse_epilogue: bool = False
+
+
+@dataclass(frozen=True)
+class HeadSpec:
+    """Classifier head."""
+
+    kind: str = "linear"  # linear (z @ W) | select_linear (z[target] @ W)
+    target: Optional[str] = None  # node type for select_linear
+    param: str = "cls"  # which parameter leaf holds the classifier matrix
+
+
+@dataclass(frozen=True)
+class StagePlan:
+    """One model's whole execution, declared as data.
+
+    ``metapaths`` carries the static per-metapath node-type paths (HAN's
+    subgraph count, MAGNN's per-position gather types) so the device batch
+    holds arrays only.
+    """
+
+    model: str
+    target: str  # target node type (classification rows)
+    fp: FPSpec
+    na: NASpec
+    sa: SASpec
+    head: HeadSpec
+    metapaths: Tuple[Tuple[str, ...], ...] = ()
+    batch_specs: Tuple[ShardRule, ...] = ()
+    param_specs: Tuple[ShardRule, ...] = (("fp", 2, (None, MODEL)),)
+
+    @property
+    def shards_on_mesh(self) -> bool:
+        """CSR gather/scatter cannot shard; every padded layout can."""
+        return self.na.layout != "csr"
+
+
+# Shared batch-sharding rule sets (destination nodes over BATCH, source pools
+# replicated — the stage-aware strategy of `stages.HGNN_STAGE_SPECS`).
+STACKED_BATCH_SPECS: Tuple[ShardRule, ...] = (
+    ("nbr", 3, (None, BATCH, None)),  # HAN [P, N, K]
+    ("mask", 3, (None, BATCH, None)),
+)
+BUCKETED_BATCH_SPECS: Tuple[ShardRule, ...] = (
+    ("buckets", 2, (BATCH, None)),  # per-bucket nbr / mask [n_b, K_b]
+    ("buckets", 1, (BATCH,)),  # per-bucket row_ids
+)
+RELATION_BATCH_SPECS: Tuple[ShardRule, ...] = (
+    ("rels", 2, (BATCH, None)),  # per-relation nbr / mask [N_d, K]
+    ("rels", 1, (BATCH,)),  # per-relation bucket row_ids
+)
+INSTANCE_BATCH_SPECS: Tuple[ShardRule, ...] = (
+    ("instances", 3, (BATCH, None, None)),  # [N, I, L] instance node tables
+    ("instances", 2, (BATCH, None)),  # [N, I] instance masks
+)

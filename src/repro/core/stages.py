@@ -39,8 +39,10 @@ HGNN_STAGE_SPECS: Dict[str, Tuple] = {
     "fp_out": (BATCH, MODEL),            # [N_t, hidden]
     "na_dst": (BATCH, None, None),       # [N, H, Dh]
     "na_src": (None, None, None),        # [M, H, Dh] replicated gather pool
-    "na_nbr": (BATCH, None),             # [N, K]
+    "na_nbr": (BATCH, None),             # [N, K]  (also [N, I] instance masks)
     "na_out": (BATCH, None, None),       # [N, H, Dh]
+    "na_inst_nodes": (BATCH, None, None),  # [N, I, L] MAGNN instance tables
+    "na_flat_out": (BATCH, None),        # [N, D] flattened NA output
     "sa_stacked": (None, BATCH, None),   # [P, N, D]
 }
 
@@ -227,6 +229,30 @@ def mean_aggregate_padded_sharded(
     mask = shard(mask, *HGNN_STAGE_SPECS["na_nbr"])
     base = agg_fn or mean_aggregate_padded
     return shard(base(h_src, nbr, mask), BATCH, None)
+
+
+def mean_aggregate_bucketed(
+    h_src: jax.Array,  # [M, D]
+    buckets,  # sequence of (row_ids [n_b], nbr [n_b, K_b], mask) device arrays
+    n_rows: int,
+    agg_fn: Optional[Callable] = None,
+) -> jax.Array:
+    """Mean NA over a degree-bucketed layout — `gat_aggregate_bucketed`'s
+    dispatch with ``agg_fn=mean`` for RGCN's per-relation tables.
+
+    Each bucket runs the padded mean at its own degree cap ``K_b`` and
+    scatters back through ``row_ids``; ``agg_fn`` swaps in the Pallas
+    ``segment_spmm`` kernel.  Stage-aware sharding as in the padded path:
+    destinations over BATCH, source pool replicated (no-op off-mesh)."""
+    base = agg_fn or mean_aggregate_padded
+    h_src = shard(h_src, *HGNN_STAGE_SPECS["na_src"])
+    out = jnp.zeros((n_rows, h_src.shape[-1]), h_src.dtype)
+    for row_ids, nbr, mask in buckets:
+        z = base(h_src,
+                 shard(nbr, *HGNN_STAGE_SPECS["na_nbr"]),
+                 shard(mask, *HGNN_STAGE_SPECS["na_nbr"]))
+        out = out.at[row_ids].set(z.astype(out.dtype))
+    return shard(out, *HGNN_STAGE_SPECS["na_flat_out"])
 
 
 def mean_aggregate_csr(

@@ -35,6 +35,14 @@ An optional leading stack dim ``S`` (HAN's per-metapath subgraphs, stacked
 Layout note: features travel as 2-D ``[rows, H*Dh]`` tiles (lane-friendly)
 and reshape to ``[rows, H, Dh]`` inside the kernel for the per-head math;
 ``mask`` is {0,1}-valued (GAT edge presence), matching ``ref.gat_na``.
+
+**Fused NA→SA epilogue** (``sem=...``): the paper's inter-stage-reuse
+guideline.  Semantic Aggregation's pass 1 (``w_p = mean_n q·tanh(z_p W + b)``,
+see kernels/semantic_attn.py) re-reads the whole ``[P, N, D]`` NA output from
+HBM.  With ``sem`` given, each output tile is activated (elu) and folded into
+the per-subgraph score partial *while still in VMEM* — the kernel returns
+``(z, w)`` and SA shrinks to a length-P softmax plus the weighted combine,
+eliminating one full HBM pass over the stack.
 """
 from __future__ import annotations
 
@@ -88,10 +96,43 @@ def _init_carry(bn: int, n_heads: int, dh: int):
             jnp.full((bn, n_heads), _NEG, jnp.float32))
 
 
-def _finish(carry, out_ref):
+def _finish(carry):
     acc, denom, _ = carry
     out = acc / jnp.maximum(denom, 1e-9)[..., None]
-    out_ref[...] = out.reshape(out.shape[0], -1).astype(out_ref.dtype)[None]
+    return out.reshape(out.shape[0], -1)  # [BN, H*Dh] f32
+
+
+def _write(out2d, out_ref):
+    out_ref[...] = out2d.astype(out_ref.dtype)[None]
+
+
+def _sa_epilogue(out2d, w_ref, b_ref, q_ref, out_ref, scores_ref,
+                 block_n: int, n_valid: int):
+    """Activate the tile and fold SA pass 1 into it while it sits in VMEM.
+
+    Writes ``z = elu(out)`` and accumulates ``sum_n q·tanh(z W + b)`` for
+    this subgraph into ``scores_ref`` across the row-tile grid dim; rows past
+    ``n_valid`` (the block_n pad) contribute nothing.
+    """
+    t = pl.program_id(1)
+    z = jnp.where(out2d > 0, out2d, jnp.expm1(out2d))  # elu (NA activation)
+    _write(z, out_ref)
+    w = w_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)  # [1, Hs]
+    q = q_ref[...].astype(jnp.float32)  # [1, Hs]
+    s = jnp.tanh(z @ w + b)  # [BN, Hs]
+    part = (s * q).sum(axis=-1, keepdims=True)  # [BN, 1]
+    rows = t * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, (z.shape[0], 1), 0)
+    part = jnp.where(rows < n_valid, part, 0.0).sum()
+
+    @pl.when(t == 0)
+    def _init():
+        scores_ref[...] = jnp.full((1, 1), part, jnp.float32)
+
+    @pl.when(t != 0)
+    def _acc():
+        scores_ref[...] = scores_ref[...] + part
 
 
 def _edst(hdst, a_dst, n_heads: int):
@@ -101,7 +142,12 @@ def _edst(hdst, a_dst, n_heads: int):
 
 
 def _resident_kernel(nbr_ref, mask_ref, hdst_ref, adst_ref, asrc_ref,
-                     hsrc_ref, out_ref, *, n_heads: int):
+                     hsrc_ref, *rest, n_heads: int, block_n: int = 0,
+                     n_valid: int = 0, fuse_sa: bool = False):
+    if fuse_sa:
+        w_ref, b_ref, q_ref, out_ref, scores_ref = rest
+    else:
+        (out_ref,) = rest
     nbr = nbr_ref[0]
     mask = mask_ref[0]
     a_dst = adst_ref[0].astype(jnp.float32)
@@ -111,12 +157,22 @@ def _resident_kernel(nbr_ref, mask_ref, hdst_ref, adst_ref, asrc_ref,
     dh = hdst_ref.shape[1] // n_heads
     carry = _tile_update(_init_carry(bn, n_heads, dh), nbr, mask, e_dst,
                          a_src, hsrc_ref[...], 0, n_heads)
-    _finish(carry, out_ref)
+    out2d = _finish(carry)
+    if fuse_sa:
+        _sa_epilogue(out2d, w_ref, b_ref, q_ref, out_ref, scores_ref,
+                     block_n, n_valid)
+    else:
+        _write(out2d, out_ref)
 
 
 def _streaming_kernel(sched_ref, count_ref, nbr_ref, mask_ref, hdst_ref,
-                      adst_ref, asrc_ref, hsrc_ref, out_ref, buf, sem,
-                      *, n_heads: int, block_m: int):
+                      adst_ref, asrc_ref, hsrc_ref, *rest,
+                      n_heads: int, block_m: int, block_n: int = 0,
+                      n_valid: int = 0, fuse_sa: bool = False):
+    if fuse_sa:
+        w_ref, b_ref, q_ref, out_ref, scores_ref, buf, sem = rest
+    else:
+        out_ref, buf, sem = rest
     st = pl.program_id(0) * pl.num_programs(1) + pl.program_id(1)
     nc = count_ref[st]
     nbr = nbr_ref[0]
@@ -150,7 +206,12 @@ def _streaming_kernel(sched_ref, count_ref, nbr_ref, mask_ref, hdst_ref,
                             n_heads)
 
     carry = jax.lax.fori_loop(0, nc, body, _init_carry(bn, n_heads, dh))
-    _finish(carry, out_ref)
+    out2d = _finish(carry)
+    if fuse_sa:
+        _sa_epilogue(out2d, w_ref, b_ref, q_ref, out_ref, scores_ref,
+                     block_n, n_valid)
+    else:
+        _write(out2d, out_ref)
 
 
 def _normalize(p: Dict, h_dst, h_src, nbr, mask) -> Tuple:
@@ -171,10 +232,14 @@ def gat_na(
     block_m: int = 0,  # 0 = auto (resident if the table fits, else 512)
     vmem_budget: int = streaming.VMEM_TABLE_BUDGET,
     interpret: bool = False,
+    sem=None,  # {"W" [H*Dh, Hs], "b" [Hs], "q" [Hs]}: fused NA→SA epilogue
 ) -> jax.Array:
     """Fused multi-head GAT NA; one launch per (stacked) subgraph batch.
 
-    Returns ``[N, H, Dh]`` (``[S, N, H, Dh]`` for the stacked form).
+    Returns ``[N, H, Dh]`` (``[S, N, H, Dh]`` for the stacked form).  With
+    ``sem`` the output is elu-activated and the SA pass-1 score partial is
+    accumulated in the same launch; returns ``(z, w [S])`` (``(z, w)``
+    scalars for the unstacked form) where ``w_s = mean_n q·tanh(z_s W + b)``.
     """
     p, h_dst, h_src, nbr, mask, stacked = _normalize(p, h_dst, h_src, nbr, mask)
     s_dim, n, k = nbr.shape
@@ -193,7 +258,19 @@ def gat_na(
 
     resident = block_m == 0 and streaming.table_fits_vmem(
         m, hdh * h_src2.dtype.itemsize, vmem_budget)
+    fuse_sa = sem is not None
+    extra_in: list = []
+    if fuse_sa:
+        hs = sem["W"].shape[1]
+        extra_in = [sem["W"].astype(jnp.float32),
+                    sem["b"].astype(jnp.float32)[None, :],
+                    sem["q"].astype(jnp.float32)[None, :]]
     out_shape = jax.ShapeDtypeStruct((s_dim, n + n_pad, hdh), h_dst.dtype)
+    out_spec = pl.BlockSpec((1, block_n, hdh), lambda s, t: (s, t, 0))
+    if fuse_sa:
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((s_dim, 1), jnp.float32)]
+        out_spec = [out_spec, pl.BlockSpec((1, 1), lambda s, t: (s, 0))]
     row_specs = [
         pl.BlockSpec((1, block_n, k), lambda s, t: (s, t, 0)),  # nbr
         pl.BlockSpec((1, block_n, k), lambda s, t: (s, t, 0)),  # mask
@@ -201,17 +278,25 @@ def gat_na(
         pl.BlockSpec((1, n_heads, dh), lambda s, t: (s, 0, 0)),  # a_dst
         pl.BlockSpec((1, n_heads, dh), lambda s, t: (s, 0, 0)),  # a_src
     ]
-    out_spec = pl.BlockSpec((1, block_n, hdh), lambda s, t: (s, t, 0))
+    sem_specs = [
+        pl.BlockSpec((hdh, hs), lambda s, t: (0, 0)),  # W
+        pl.BlockSpec((1, hs), lambda s, t: (0, 0)),    # b
+        pl.BlockSpec((1, hs), lambda s, t: (0, 0)),    # q
+    ] if fuse_sa else []
+    kern_kw = dict(n_heads=n_heads, fuse_sa=fuse_sa, block_n=block_n,
+                   n_valid=n)
 
     if resident:
         out = pl.pallas_call(
-            functools.partial(_resident_kernel, n_heads=n_heads),
+            functools.partial(_resident_kernel, **kern_kw),
             grid=(s_dim, n_tiles),
-            in_specs=row_specs + [pl.BlockSpec((m, hdh), lambda s, t: (0, 0))],
+            in_specs=(row_specs
+                      + [pl.BlockSpec((m, hdh), lambda s, t: (0, 0))]
+                      + sem_specs),
             out_specs=out_spec,
             out_shape=out_shape,
             interpret=interpret,
-        )(nbr, mask, h_dst2, a_dst, a_src, h_src2)
+        )(nbr, mask, h_dst2, a_dst, a_src, h_src2, *extra_in)
     else:
         if block_m == 0:
             block_m = 512
@@ -220,30 +305,36 @@ def gat_na(
         n_chunks = h_src2.shape[0] // block_m
         sched, count = streaming.chunk_schedule(
             nbr.reshape(-1, k), mask.reshape(-1, k), block_n, n_chunks, block_m)
+
+        def drop_sched(spec):
+            """Lift a (s, t) index map over the scalar-prefetch operands."""
+            return pl.BlockSpec(spec.block_shape,
+                                lambda s, t, *_: spec.index_map(s, t))
+
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=(s_dim, n_tiles),
-            in_specs=[
-                pl.BlockSpec((1, block_n, k), lambda s, t, *_: (s, t, 0)),
-                pl.BlockSpec((1, block_n, k), lambda s, t, *_: (s, t, 0)),
-                pl.BlockSpec((block_n, hdh), lambda s, t, *_: (t, 0)),
-                pl.BlockSpec((1, n_heads, dh), lambda s, t, *_: (s, 0, 0)),
-                pl.BlockSpec((1, n_heads, dh), lambda s, t, *_: (s, 0, 0)),
-                pl.BlockSpec(memory_space=pltpu.ANY),  # h_src stays in HBM
-            ],
-            out_specs=pl.BlockSpec((1, block_n, hdh), lambda s, t, *_: (s, t, 0)),
+            in_specs=([drop_sched(sp) for sp in row_specs]
+                      + [pl.BlockSpec(memory_space=pltpu.ANY)]  # h_src in HBM
+                      + [drop_sched(sp) for sp in sem_specs]),
+            out_specs=([drop_sched(sp) for sp in out_spec] if fuse_sa
+                       else drop_sched(out_spec)),
             scratch_shapes=[
                 pltpu.VMEM((2, block_m, hdh), h_src2.dtype),  # double buffer
                 pltpu.SemaphoreType.DMA((2,)),
             ],
         )
         out = pl.pallas_call(
-            functools.partial(_streaming_kernel, n_heads=n_heads,
-                              block_m=block_m),
+            functools.partial(_streaming_kernel, block_m=block_m, **kern_kw),
             grid_spec=grid_spec,
             out_shape=out_shape,
             interpret=interpret,
-        )(sched, count, nbr, mask, h_dst2, a_dst, a_src, h_src2)
+        )(sched, count, nbr, mask, h_dst2, a_dst, a_src, h_src2, *extra_in)
 
+    if fuse_sa:
+        out, scores = out
+        out = out[:, :n].reshape(s_dim, n, n_heads, dh)
+        wp = scores[:, 0] / n  # mean over (valid) nodes
+        return (out, wp) if stacked else (out[0], wp[0])
     out = out[:, :n].reshape(s_dim, n, n_heads, dh)
     return out if stacked else out[0]

@@ -98,3 +98,29 @@ def gat_aggregate_stacked(p_stacked: Dict, h_dst, h_src, nbr, mask,
         return _gat.gat_na(p_stacked, h_dst, h_src, nbr, mask,
                            interpret=interpret)
     return ref.gat_na(p_stacked, h_dst, h_src, nbr, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gat_aggregate_stacked_fused_sa(p_stacked: Dict, h_dst, h_src, nbr, mask,
+                                   sem: Dict, use_pallas: bool = False,
+                                   interpret: bool = False):
+    """Stacked GAT NA with the fused NA→SA epilogue (inter-stage reuse):
+    the semantic-score pass-1 partial accumulates inside the NA kernel while
+    each ``z`` tile is still in VMEM, so SA never re-reads the ``[P, N, D]``
+    stack for its scores.  Returns ``(z [P, N, H, Dh] elu-activated, w [P])``.
+    """
+    if use_pallas and (_on_tpu() or interpret):
+        return _gat.gat_na(p_stacked, h_dst, h_src, nbr, mask,
+                           interpret=interpret, sem=sem)
+    return ref.gat_na_fused_sa(p_stacked, h_dst, h_src, nbr, mask,
+                               sem["W"], sem["b"], sem["q"])
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def semantic_combine(z, beta, use_pallas: bool = False,
+                     interpret: bool = False):
+    """SA pass 2 only (the fused-epilogue path's remaining work): weighted
+    combine ``sum_p beta_p z_p`` — exactly one read of the stack."""
+    if use_pallas and (_on_tpu() or interpret):
+        return _sem.semantic_combine(z, beta, interpret=interpret)
+    return jnp.einsum("p,pnd->nd", beta, z)

@@ -62,6 +62,23 @@ def gat_na(
     return jnp.einsum("nkh,nkhd->nhd", alpha, h_src[nbr])  # weighted reduce
 
 
+def gat_na_fused_sa(p, h_dst, h_src, nbr, mask, w, b, q):
+    """``gat_na`` with the fused NA→SA epilogue: returns the elu-activated
+    NA output plus the per-subgraph semantic-score partial
+    ``w_s = mean_n q·tanh(z_s W + b)`` (pass 1 of semantic attention),
+    matching the kernel's ``sem=...`` contract."""
+    stacked = nbr.ndim == 3
+    z = gat_na(p, h_dst, h_src, nbr, mask)
+    if not stacked:
+        z = z[None]
+    z = jax.nn.elu(z)  # [S, N, H, Dh] — the NA activation, fused in-kernel
+    s_dim, n = z.shape[0], z.shape[1]
+    z2 = z.reshape(s_dim, n, -1)
+    sc = jnp.tanh(z2 @ w + b)
+    wp = jnp.einsum("snh,h->sn", sc, q).mean(axis=1)  # [S]
+    return (z, wp) if stacked else (z[0], wp[0])
+
+
 def semantic_attention(
     z: jax.Array,  # [P, N, D]
     w: jax.Array,  # [D, Hs]

@@ -19,9 +19,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import streaming
 
 
-def _score_kernel(z_ref, w_ref, b_ref, q_ref, out_ref):
+def _score_kernel(z_ref, w_ref, b_ref, q_ref, out_ref, *, block_n: int,
+                  n_valid: int):
     """Partial semantic scores for one row tile: out [P] += mean-partial."""
     i = pl.program_id(0)
     z = z_ref[...]  # [P, BN, D]
@@ -29,7 +33,10 @@ def _score_kernel(z_ref, w_ref, b_ref, q_ref, out_ref):
     b = b_ref[...]  # [1, Hs]
     q = q_ref[...]  # [1, Hs]
     s = jnp.tanh(z.astype(jnp.float32) @ w.astype(jnp.float32) + b.astype(jnp.float32))
-    part = (s * q.astype(jnp.float32)).sum(axis=-1).sum(axis=-1)  # [P]
+    part = (s * q.astype(jnp.float32)).sum(axis=-1)  # [P, BN]
+    # pad rows would contribute tanh(b)·q each — mask them out
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+    part = jnp.where(i * block_n + j < n_valid, part, 0.0).sum(axis=-1)  # [P]
 
     @pl.when(i == 0)
     def _init():
@@ -48,18 +55,87 @@ def _combine_kernel(z_ref, beta_ref, out_ref):
     ).astype(out_ref.dtype)
 
 
+def _score_stream_kernel(z_ref, w_ref, b_ref, q_ref, out_ref, buf, sem,
+                         *, block_n: int, n: int, n_chunks: int):
+    """Pass 1 over an HBM-resident ``z``: double-buffered chunk walk.
+
+    Chunks are consecutive ``[P, block_n, D]`` row slices; the tail chunk is
+    aligned to the array end (``off = n - block_n``) so no padded copy of
+    ``z`` ever exists — rows a previous chunk already counted are masked out.
+    """
+    w = w_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    q = q_ref[...].astype(jnp.float32)
+    p = buf.shape[1]
+
+    def off(s):
+        return jnp.minimum(s * block_n, n - block_n)
+
+    def dma(slot, s):
+        return pltpu.make_async_copy(
+            z_ref.at[:, pl.ds(off(s), block_n), :], buf.at[slot], sem.at[slot])
+
+    dma(0, 0).start()
+
+    def body(s, acc):
+        slot = jax.lax.rem(s, 2)
+
+        @pl.when(s + 1 < n_chunks)  # next chunk in flight
+        def _():
+            dma(jax.lax.rem(s + 1, 2), s + 1).start()
+
+        dma(slot, s).wait()
+        zc = buf[slot].astype(jnp.float32)  # [P, block_n, D]
+        sc = jnp.tanh(zc @ w + b)  # [P, block_n, Hs]
+        part = (sc * q).sum(axis=-1)  # [P, block_n]
+        # tail-overlap dedup: only rows at/after this chunk's logical start
+        j = jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+        part = jnp.where(j >= s * block_n - off(s), part, 0.0)
+        return acc + part.sum(axis=1)
+
+    acc = jax.lax.fori_loop(0, n_chunks, body, jnp.zeros((p,), jnp.float32))
+    out_ref[...] = acc[None]
+
+
 def semantic_scores(
     z: jax.Array, w: jax.Array, b: jax.Array, q: jax.Array,
     block_n: int = 512, interpret: bool = False,
+    vmem_budget: int = streaming.VMEM_TABLE_BUDGET,
 ) -> jax.Array:
     p, n, d = z.shape
     hs = w.shape[1]
+    block_n = min(block_n, n)
+    oversized = n * p * d * z.dtype.itemsize > vmem_budget
+    if oversized and n > block_n:
+        # streaming split (as in the NA kernels): z stays in HBM, chunks ride
+        # double-buffered DMAs, and — unlike the resident path — no padded
+        # whole-array copy of the [P, N, D] stack is ever materialized.
+        n_chunks = -(-n // block_n)
+        out = pl.pallas_call(
+            functools.partial(_score_stream_kernel, block_n=block_n, n=n,
+                              n_chunks=n_chunks),
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.ANY),  # z stays in HBM
+                pl.BlockSpec((d, hs), lambda i: (0, 0)),
+                pl.BlockSpec((1, hs), lambda i: (0, 0)),
+                pl.BlockSpec((1, hs), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, p), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((1, p), jnp.float32),
+            scratch_shapes=[
+                pltpu.VMEM((2, p, block_n, d), z.dtype),  # double buffer
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+            interpret=interpret,
+        )(z, w, b[None, :], q[None, :])
+        return out[0] / n
     n_pad = (-n) % block_n
-    if n_pad:
+    if n_pad:  # resident path: pad cost bounded by one tile
         z = jnp.pad(z, ((0, 0), (0, n_pad), (0, 0)))
     grid = ((n + n_pad) // block_n,)
     out = pl.pallas_call(
-        _score_kernel,
+        functools.partial(_score_kernel, block_n=block_n, n_valid=n),
         grid=grid,
         in_specs=[
             pl.BlockSpec((p, block_n, d), lambda i: (0, i, 0)),

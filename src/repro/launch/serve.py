@@ -38,104 +38,123 @@ class BuiltHGNNInfer(NamedTuple):
     fn: Any      # jitted (params, batch) -> logits
     params: Any  # device_put with stage-aware shardings (if mesh given)
     batch: Any
+    plan: Any = None      # the StagePlan the executor runs
+    executor: Any = None  # StageGraphExecutor (characterization hooks)
 
 
-def hgnn_shardings(params: Any, batch: Any, mesh: Mesh):
-    """Stage-aware NamedShardings for fused-path HGNN inference inputs.
+def hgnn_shardings(plan, params: Any, batch: Any, mesh: Mesh):
+    """Resolve a plan's declarative sharding tables into NamedShardings.
 
-    Follows ``repro.core.stages.HGNN_STAGE_SPECS``: FP projection matrices
-    column-sharded over 'model' (DM-Type), padded neighbor tables sharded
-    over destination nodes on the batch axes (TB-Type) — including the
-    degree-bucketed layout, whose per-bucket ``(row_ids, nbr, mask)`` tuples
-    ride the same destination-node sharding — everything small (attention
-    vectors, classifier, features pool) replicated.
+    ``plan.param_specs`` / ``plan.batch_specs`` are (key, ndim, logical-spec)
+    rules (see ``repro.core.plan``): a pytree leaf whose dict path contains
+    ``key`` and whose rank matches gets the resolved spec; everything else
+    (attention vectors, classifier, feature pools) replicates.  The rules
+    follow ``HGNN_STAGE_SPECS`` — FP weights column-sharded over 'model',
+    destination-node tables over the BATCH axes, source pools replicated —
+    and cover every layout (stacked, bucketed, per-relation, instance)
+    without model-specific branches here.
     """
-    from repro.core.stages import HGNN_STAGE_SPECS
-    from repro.dist.sharding import BATCH
-
     rep = NamedSharding(mesh, P())
 
     def named(shape, logical):
         return NamedSharding(mesh, resolve_spec(shape, logical, mesh))
 
-    def param_sh(path, leaf):
-        keys = [k.key for k in path if isinstance(k, DictKey)]
-        if "fp" in keys and getattr(leaf, "ndim", 0) == 2:
-            return named(leaf.shape, HGNN_STAGE_SPECS["fp_weight"])
-        return rep
+    def resolver(rules):
+        def fn(path, leaf):
+            keys = [k.key for k in path if isinstance(k, DictKey)]
+            nd = getattr(leaf, "ndim", None)
+            for key, ndim, spec in rules:
+                if nd == ndim and key in keys:
+                    return named(leaf.shape, spec)
+            return rep
+        return fn
 
-    def batch_sh(path, leaf):
-        keys = [k.key for k in path if isinstance(k, DictKey)]
-        nd = getattr(leaf, "ndim", 0)
-        if keys and keys[-1] in ("nbr", "mask") and nd == 3:  # HAN [P,N,K]
-            return named(leaf.shape, (None,) + HGNN_STAGE_SPECS["na_nbr"])
-        if "rels" in keys and nd == 2:  # RGCN per-relation (nbr, mask)
-            return named(leaf.shape, HGNN_STAGE_SPECS["na_nbr"])
-        if "buckets" in keys:  # degree-bucketed HAN: per-bucket tuples
-            if nd == 2:  # nbr / mask [n_b, K_b]
-                return named(leaf.shape, HGNN_STAGE_SPECS["na_nbr"])
-            if nd == 1:  # row_ids ride the destination-node sharding
-                return named(leaf.shape, (BATCH,))
-        return rep
-
-    return tree_map_with_path(param_sh, params), tree_map_with_path(batch_sh, batch)
+    return (tree_map_with_path(resolver(plan.param_specs), params),
+            tree_map_with_path(resolver(plan.batch_specs), batch))
 
 
 def build_hgnn_infer(cfg: HGNNConfig, hg, mesh: Optional[Mesh] = None,
                      rng: Optional[jax.Array] = None) -> BuiltHGNNInfer:
-    """Stage-aware sharded HGNN inference entry point.
+    """Stage-aware sharded HGNN inference entry point — plan-driven.
 
     The paper's finding — FP is dense DM-Type, NA is irregular TB-Type, SA is
     EW-Type — becomes the partitioning strategy: FP shards its projection
     matmul over 'model', padded NA shards destination nodes over the batch
     axes with a replicated source pool, SA needs no resharding.  With
     ``mesh=None`` this is the plain single-device path (identical math).
-    ``cfg.fused=True`` is required: only the padded/stacked NA layout shards.
+    A padded NA layout is required on a mesh (``cfg.fused=True`` for
+    HAN/RGCN; MAGNN's instance tables always shard).
     """
     from repro.core.models import get_model
 
-    if mesh is not None and not cfg.fused:
-        raise ValueError("sharded HGNN inference needs cfg.fused=True "
-                         "(padded NA layout)")
     model = get_model(cfg)
+    plan = model.plan()
+    if cfg.fuse_na_sa and not plan.sa.fuse_epilogue:
+        import warnings
+
+        warnings.warn(
+            f"fuse_na_sa requested but {plan.model}'s NA layout "
+            f"({plan.na.layout!r}) does not support the NA→SA epilogue "
+            "(stacked only); running two-pass SA", stacklevel=2)
+    if mesh is not None and not plan.shards_on_mesh:
+        raise ValueError(
+            f"sharded HGNN inference needs a padded NA layout, but "
+            f"{plan.model}'s plan resolved to 'csr' (gather/scatter cannot "
+            "shard): set cfg.fused=True for HAN/RGCN; GCN has no sharded "
+            "layout")
     batch = model.prepare(hg)
     params = model.init(rng if rng is not None else jax.random.key(cfg.seed),
                         batch)
 
     if mesh is None:
-        return BuiltHGNNInfer(jax.jit(model.forward), params, batch)
+        return BuiltHGNNInfer(jax.jit(model.forward), params, batch,
+                              plan, model.executor)
 
     def fn(p, b):
         with use_mesh(mesh):
             return model.forward(p, b)
 
-    p_sh, b_sh = hgnn_shardings(params, batch, mesh)
+    p_sh, b_sh = hgnn_shardings(plan, params, batch, mesh)
     params = jax.device_put(params, p_sh)
     batch = jax.device_put(batch, b_sh)
-    return BuiltHGNNInfer(jax.jit(fn), params, batch)
+    return BuiltHGNNInfer(jax.jit(fn), params, batch, plan, model.executor)
 
 
 def run_hgnn(args) -> None:
     from repro.data.synthetic import make_dataset
     from repro.launch.mesh import make_smoke_mesh
+    from repro.serve.engine import HGNNInferEngine
 
+    if args.hgnn == "gcn" and args.dataset != "reddit":
+        raise SystemExit("--hgnn gcn runs the paper's homogeneous GNN "
+                         "comparison: use --dataset reddit")
     cfg = HGNNConfig(model=args.hgnn, dataset=args.dataset, fused=True,
                      use_pallas=args.use_pallas,
-                     degree_buckets=args.degree_buckets)
+                     degree_buckets=args.degree_buckets,
+                     fuse_na_sa=args.fuse_na_sa)
     hg = make_dataset(args.dataset)
     mesh = None
     if args.mesh_data * args.mesh_model > 1:
         mesh = make_smoke_mesh(data=args.mesh_data, model=args.mesh_model)
     built = build_hgnn_infer(cfg, hg, mesh)
-    logits = jax.block_until_ready(built.fn(built.params, built.batch))
+    engine = HGNNInferEngine(built.executor, built.params, built.batch,
+                             fn=built.fn)
+    logits = jax.block_until_ready(engine.infer())
     t0 = time.time()
     for _ in range(args.iters):
-        logits = jax.block_until_ready(built.fn(built.params, built.batch))
+        logits = jax.block_until_ready(engine.infer())
     dt = (time.time() - t0) / max(args.iters, 1)
     mesh_desc = (f"{dict(zip(mesh.axis_names, mesh.devices.shape))}"
                  if mesh else "single-device")
-    print(f"{cfg.model}/{cfg.dataset} logits {logits.shape} on {mesh_desc}: "
-          f"{dt*1e3:.2f} ms/iter")
+    na = built.plan.na
+    print(f"{cfg.model}/{cfg.dataset} [na={na.kind}/{na.layout}"
+          f"{' +fused-sa' if built.plan.sa.fuse_epilogue else ''}] "
+          f"logits {logits.shape} on {mesh_desc}: {dt*1e3:.2f} ms/iter")
+    if args.characterize:
+        for stage, rec in engine.characterize().items():
+            print(f"  {stage}: flops={rec['flops']:.3g} "
+                  f"hbm_bytes={rec['hbm_bytes']:.3g} "
+                  f"bound={rec['roofline']['bound']}")
 
 
 def main() -> None:
@@ -148,7 +167,8 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--slots", type=int, default=4)
     # HGNN inference mode (stage-aware sharded; see run_hgnn)
-    ap.add_argument("--hgnn", default=None, choices=["han", "rgcn"],
+    ap.add_argument("--hgnn", default=None,
+                    choices=["han", "rgcn", "magnn", "gcn"],
                     help="serve an HGNN model instead of an LM")
     ap.add_argument("--dataset", default="imdb",
                     choices=["imdb", "acm", "dblp", "reddit"])
@@ -158,7 +178,13 @@ def main() -> None:
                     help="fused GAT-NA / segment-SpMM Pallas kernels "
                          "(TPU backend)")
     ap.add_argument("--degree-buckets", type=int, default=0,
-                    help=">1: degree-bucketed padded NA layout (HAN)")
+                    help=">1: degree-bucketed padded NA layout "
+                         "(HAN metapaths + RGCN per-relation tables)")
+    ap.add_argument("--fuse-na-sa", action="store_true",
+                    help="fused NA→SA epilogue: SA pass-1 scores accumulate "
+                         "inside the NA kernel (stacked layout)")
+    ap.add_argument("--characterize", action="store_true",
+                    help="print the per-stage FLOPs/bytes/roofline records")
     ap.add_argument("--iters", type=int, default=3)
     args = ap.parse_args()
 

@@ -1,10 +1,15 @@
-"""Batched serving engine: slot-based continuous batching over the
-prefill/decode step functions.
+"""Serving engines.
 
-Requests occupy fixed batch slots; each decode step advances every active
-slot by one token.  Finished slots (EOS or max_tokens) are refilled from the
-queue without stopping the decode loop — decode-32k-style serving as the
-paper's shapes require.  Sampling: greedy or temperature.
+``ServeEngine`` — LM slot-based continuous batching over the prefill/decode
+step functions.  Requests occupy fixed batch slots; each decode step advances
+every active slot by one token.  Finished slots (EOS or max_tokens) are
+refilled from the queue without stopping the decode loop — decode-32k-style
+serving as the paper's shapes require.  Sampling: greedy or temperature.
+
+``HGNNInferEngine`` — HGNN inference driven by a :class:`StagePlan`: the
+engine holds the stage-graph executor (not a model class), serves the jitted
+forward, and exposes the per-stage characterization records from the exact
+code path it serves.
 """
 from __future__ import annotations
 
@@ -18,6 +23,36 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.nn import transformer as tf
+
+
+class HGNNInferEngine:
+    """Plan-driven HGNN serving.
+
+    Consumes a :class:`repro.core.pipeline.StageGraphExecutor` (built from a
+    :class:`repro.core.plan.StagePlan`) plus the prepared params/batch —
+    typically the fields of ``launch.serve.build_hgnn_infer``'s result.  The
+    executor resolves layout / kernel / sharding dispatch; the engine adds
+    the serving loop and the characterization hook, so the stage breakdown
+    reported to operators comes from the same plan that serves traffic.
+    """
+
+    def __init__(self, executor, params, batch, fn=None):
+        self.executor = executor
+        self.plan = executor.plan
+        self.params = params
+        self.batch = batch
+        self.fn = fn if fn is not None else jax.jit(executor.forward)
+
+    def infer(self) -> jax.Array:
+        """One full forward over the prepared batch -> logits."""
+        return self.fn(self.params, self.batch)
+
+    def characterize(self, n_chips: int = 1) -> Dict[str, Dict]:
+        """Per-stage (FP/NA/SA/head) FLOPs / HBM bytes / roofline records
+        via ``core/characterize.py`` — the paper's Fig. 3 breakdown from the
+        serving code path."""
+        return self.executor.stage_records(self.params, self.batch,
+                                           n_chips=n_chips)["stages"]
 
 
 @dataclasses.dataclass

@@ -1,0 +1,326 @@
+"""Stage-graph executor: the parity matrix.
+
+Every model runs through the one executor (core/pipeline.py) across the
+execution modes the plan can express — {baseline, fused, bucketed,
+streaming, sharded-8dev, fused NA→SA epilogue} — and must match the seed
+reference path.  Also pins: plan-layout resolution, the RGCN bucketed-mean
+dispatch, and that per-stage characterization records sum to the
+whole-model totals.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HGNNConfig
+from repro.core import metapath as mp, stages
+from repro.core.models import get_model
+from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
+
+
+def _tiny_tables():
+    DATASET_METAPATHS["tiny"] = [["M", "D", "M"], ["M", "A", "M"]]
+    DATASET_TARGET["tiny"] = "M"
+
+
+def _cfg(model, **kw):
+    _tiny_tables()
+    kw = {"max_degree": 48, "max_instances": 4, **kw}
+    return HGNNConfig(model=model, dataset="tiny", hidden=16, n_heads=4,
+                      n_classes=3, **kw)
+
+
+def _forward(cfg, hg, params=None):
+    m = get_model(cfg)
+    batch = m.prepare(hg)
+    if params is None:
+        params = m.init(jax.random.key(0), batch)
+    return m, params, np.asarray(m.forward(params, batch))
+
+
+def _force_interpret(monkeypatch, name):
+    """Force an ops wrapper onto the Pallas path in interpret mode."""
+    from repro.kernels import ops
+
+    orig = getattr(ops, name)
+    monkeypatch.setattr(
+        ops, name,
+        lambda *args, use_pallas=False, interpret=False, **kw:
+        orig(*args, use_pallas=True, interpret=True, **kw))
+
+
+def _force_streaming(monkeypatch, name):
+    """Route an ops wrapper straight into the streaming kernel (small chunk
+    size so the double-buffered DMA path genuinely runs)."""
+    from repro.kernels import gat_na as gmod, segment_spmm as smod, ops
+
+    if name == "gat_aggregate_stacked":
+        monkeypatch.setattr(
+            ops, name,
+            lambda p, hd, hs, nn, mm, **kw: gmod.gat_na(
+                p, hd, hs, nn, mm, block_n=16, block_m=8, interpret=True))
+    elif name == "gat_aggregate_stacked_fused_sa":
+        monkeypatch.setattr(
+            ops, name,
+            lambda p, hd, hs, nn, mm, sem, **kw: gmod.gat_na(
+                p, hd, hs, nn, mm, block_n=16, block_m=8, interpret=True,
+                sem=sem))
+    elif name == "segment_spmm":
+        monkeypatch.setattr(
+            ops, name,
+            lambda hs, nn, mm, mean=True, **kw: smod.segment_spmm(
+                hs, nn, mm, mean=mean, block_n=16, block_m=8, interpret=True))
+
+
+# ---------------------------------------------------------------------------
+# the parity matrix
+# ---------------------------------------------------------------------------
+
+MATRIX = [
+    # (model, reference kwargs, variant kwargs, ops wrapper to force, mode)
+    ("han", {"fused": False}, {"fused": True}, None, None),
+    ("han", {"fused": True}, {"fused": True, "degree_buckets": 3},
+     None, None),
+    ("han", {"fused": True}, {"fused": True, "use_pallas": True},
+     "gat_aggregate_stacked", "interpret"),
+    ("han", {"fused": True}, {"fused": True, "use_pallas": True},
+     "gat_aggregate_stacked", "streaming"),
+    ("han", {"fused": True}, {"fused": True, "fuse_na_sa": True},
+     None, None),
+    ("han", {"fused": True},
+     {"fused": True, "fuse_na_sa": True, "use_pallas": True},
+     "gat_aggregate_stacked_fused_sa", "interpret"),
+    ("han", {"fused": True},
+     {"fused": True, "fuse_na_sa": True, "use_pallas": True},
+     "gat_aggregate_stacked_fused_sa", "streaming"),
+    ("rgcn", {"fused": False}, {"fused": True}, None, None),
+    ("rgcn", {"fused": True}, {"fused": True, "degree_buckets": 3},
+     None, None),
+    ("rgcn", {"fused": True}, {"fused": True, "use_pallas": True},
+     "segment_spmm", "streaming"),
+    ("rgcn", {"fused": True},
+     {"fused": True, "degree_buckets": 3, "use_pallas": True},
+     "segment_spmm", "interpret"),
+    ("magnn", {}, {"use_pallas": True}, "gat_aggregate", "interpret"),
+]
+
+
+@pytest.mark.parametrize(
+    "model,ref_kw,var_kw,wrapper,mode", MATRIX,
+    ids=[f"{m}-{'_'.join(f'{k}{v}' for k, v in v_kw.items())}-{md or 'xla'}"
+         for m, _, v_kw, _, md in MATRIX])
+def test_executor_parity_matrix(tiny_hg, monkeypatch, model, ref_kw, var_kw,
+                                wrapper, mode):
+    cfg_ref = _cfg(model, **ref_kw)
+    _, params, want = _forward(cfg_ref, tiny_hg)
+    if wrapper is not None:
+        (_force_streaming if mode == "streaming"
+         else _force_interpret)(monkeypatch, wrapper)
+    cfg_var = _cfg(model, **var_kw)
+    m_var = get_model(cfg_var)
+    b_var = m_var.prepare(tiny_hg)
+    # same init key: identical params modulo layout (stacking / lists)
+    p_var = m_var.init(jax.random.key(0), b_var)
+    got = np.asarray(m_var.forward(p_var, b_var))
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+def test_gcn_runs_through_executor():
+    from repro.data.synthetic import make_reddit_like
+
+    hg = make_reddit_like(scale=0.005)
+    cfg = HGNNConfig(model="gcn", dataset="reddit", hidden=16, n_classes=5)
+    m, params, out = _forward(cfg, hg)
+    assert m.plan().na.kind == "gcn" and m.plan().sa.kind == "none"
+    assert out.shape[1] == 5 and np.isfinite(out).all()
+
+
+def test_executor_sharded_8dev_matches_single_device(tiny_hg):
+    """{HAN stacked, HAN bucketed, RGCN bucketed, MAGNN} through
+    build_hgnn_infer on a forced 2x4 host mesh == unsharded forward."""
+    code = textwrap.dedent("""
+        import numpy as np, scipy.sparse as sp, jax
+        from repro.configs.base import HGNNConfig
+        from repro.core.hgraph import HeteroGraph
+        from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
+        from repro.launch.mesh import make_smoke_mesh
+        from repro.launch.serve import build_hgnn_infer
+
+        rng = np.random.default_rng(7)
+        counts = {"M": 40, "D": 15, "A": 25}
+        dims = {"M": 12, "D": 8, "A": 10}
+        feats = {t: rng.standard_normal((n, dims[t])).astype(np.float32)
+                 for t, n in counts.items()}
+        def rr(ns, nd, e):
+            r = rng.integers(0, ns, e); c = rng.integers(0, nd, e)
+            return sp.csr_matrix((np.ones(e, np.float32), (r, c)),
+                                 shape=(ns, nd))
+        md, ma = rr(40, 15, 60), rr(40, 25, 80)
+        hg = HeteroGraph(counts, feats,
+                         {("M", "md", "D"): md, ("D", "dm", "M"): md.T.tocsr(),
+                          ("M", "ma", "A"): ma, ("A", "am", "M"): ma.T.tocsr()},
+                         name="tiny")
+        DATASET_METAPATHS["tiny"] = [["M", "D", "M"], ["M", "A", "M"]]
+        DATASET_TARGET["tiny"] = "M"
+
+        mesh = make_smoke_mesh(data=2, model=4)
+        cases = [
+            dict(model="han", fused=True),
+            dict(model="han", fused=True, degree_buckets=3),
+            dict(model="rgcn", fused=True, degree_buckets=3),
+            dict(model="magnn"),
+        ]
+        for kw in cases:
+            cfg = HGNNConfig(dataset="tiny", hidden=16, n_heads=4,
+                             n_classes=3, max_degree=12, max_instances=4, **kw)
+            built = build_hgnn_infer(cfg, hg, mesh)
+            sharded = np.asarray(built.fn(built.params, built.batch))
+            ref = build_hgnn_infer(cfg, hg)  # single-device, same plan
+            plain = np.asarray(ref.fn(ref.params, ref.batch))
+            np.testing.assert_allclose(sharded, plain, rtol=2e-4, atol=2e-4)
+            print("OK", kw)
+    """)
+    env = {**os.environ, "PYTHONPATH": "src",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert r.stdout.count("OK") == 4
+
+
+# ---------------------------------------------------------------------------
+# plan + dispatch invariants
+# ---------------------------------------------------------------------------
+
+def test_plan_layout_resolution():
+    _tiny_tables()
+    assert get_model(_cfg("han", fused=False)).plan().na.layout == "csr"
+    assert get_model(_cfg("han", fused=True)).plan().na.layout == "stacked"
+    p = get_model(_cfg("han", fused=True, degree_buckets=3)).plan()
+    assert p.na.layout == "bucketed"
+    assert not p.sa.fuse_epilogue  # epilogue is stacked-only
+    p = get_model(_cfg("han", fused=True, fuse_na_sa=True)).plan()
+    assert p.sa.fuse_epilogue
+    assert get_model(_cfg("rgcn", fused=True)).plan().na.layout == "padded"
+    assert get_model(
+        _cfg("rgcn", fused=True, degree_buckets=3)).plan().na.layout == "bucketed"
+    assert get_model(_cfg("magnn")).plan().na.layout == "instances"
+    # CSR layouts refuse to shard
+    assert not get_model(_cfg("han", fused=False)).plan().shards_on_mesh
+    assert get_model(_cfg("magnn")).plan().shards_on_mesh
+
+
+def test_mean_aggregate_bucketed_matches_padded(tiny_hg):
+    """RGCN satellite: bucketed mean NA == single-K padded mean NA."""
+    sub = mp.build_padded(tiny_hg, ["M", "D", "M"], max_degree=16)
+    bk = mp.bucket_padded(sub, n_buckets=3)
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.standard_normal((sub.n_nodes, 8)), jnp.float32)
+    want = stages.mean_aggregate_padded(h, jnp.asarray(sub.nbr),
+                                        jnp.asarray(sub.mask))
+    buckets = [(jnp.asarray(bk.row_ids[i]), jnp.asarray(bk.nbr[i]),
+                jnp.asarray(bk.mask[i])) for i in range(bk.n_buckets)]
+    got = stages.mean_aggregate_bucketed(h, buckets, sub.n_nodes)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rgcn_bucketed_layout_strictly_smaller(tiny_hg):
+    cfg = _cfg("rgcn", fused=True, degree_buckets=3, max_degree=16)
+    m = get_model(cfg)
+    batch = m.prepare(tiny_hg)
+    cfg_p = _cfg("rgcn", fused=True, max_degree=16)
+    batch_p = get_model(cfg_p).prepare(tiny_hg)
+    for key, buckets in batch["rels"].items():
+        assert isinstance(buckets, list)
+        padded = sum(b[1].size for b in buckets)
+        assert padded <= batch_p["rels"][key][0].size
+
+
+# ---------------------------------------------------------------------------
+# characterization records
+# ---------------------------------------------------------------------------
+
+def test_stage_records_sum_to_totals(tiny_hg):
+    """Per-stage characterization records must sum to the whole-model
+    totals the executor reports (and each stage must be populated)."""
+    cfg = _cfg("han", fused=True)
+    m = get_model(cfg)
+    batch = m.prepare(tiny_hg)
+    params = m.init(jax.random.key(0), batch)
+    recs = m.stage_records(params, batch)
+    assert set(recs["stages"]) == {"FP", "NA", "SA", "head"}
+    for name, r in recs["stages"].items():
+        assert r["flops"] > 0, name
+        assert r["hbm_bytes"] > 0, name
+        assert r["roofline"]["bound"] in ("compute", "memory", "collective")
+    assert recs["total"]["flops"] == pytest.approx(
+        sum(r["flops"] for r in recs["stages"].values()))
+    assert recs["total"]["hbm_bytes"] == pytest.approx(
+        sum(r["hbm_bytes"] for r in recs["stages"].values()))
+
+
+def test_fused_epilogue_saves_an_hbm_pass(tiny_hg):
+    """The acceptance invariant, counted via core/characterize.py: with the
+    epilogue, the SA stage fn moves at least one full [P, N, D] pass less."""
+    from repro.core.characterize import analyze_hlo_text
+
+    def sa_bytes(cfg):
+        m = get_model(cfg)
+        batch = m.prepare(tiny_hg)
+        params = m.init(jax.random.key(0), batch)
+        fns = m.executor.stage_fns(params, batch)
+        fn, args = fns["SA"]
+        rep = analyze_hlo_text(fn.lower(*args).compile().as_text())
+        z = args[1]  # the SA input: [P, N, D] stack (or (stack, scores))
+        z = z[0] if isinstance(z, tuple) else z
+        return rep["total_hbm_bytes"], z.size * z.dtype.itemsize
+
+    two_pass, z_bytes = sa_bytes(_cfg("han", fused=True))
+    fused, _ = sa_bytes(_cfg("han", fused=True, fuse_na_sa=True))
+    assert two_pass - fused >= 0.9 * z_bytes, (two_pass, fused, z_bytes)
+
+
+@pytest.mark.parametrize("n,block_n", [(200, 64), (256, 64), (70, 512)])
+def test_semantic_scores_streaming_parity(n, block_n):
+    """SA pass-1 streaming split: an oversized [P, N, D] stack stays in HBM
+    behind double-buffered DMAs (tail chunk aligned to the array end, no
+    padded whole-array copy) and must match the resident path / the math —
+    including a nonzero bias, which the pad rows must not leak."""
+    from repro.kernels.semantic_attn import semantic_scores
+
+    rng = np.random.default_rng(1)
+    p, d, hs = 3, 16, 8
+    z = jnp.asarray(rng.standard_normal((p, n, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d, hs)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal(hs) * 0.5, jnp.float32)
+    q = jnp.asarray(rng.standard_normal(hs), jnp.float32)
+    want = jnp.einsum("pnh,h->pn", jnp.tanh(z @ w + b), q).mean(axis=1)
+    # vmem_budget=1 forces the streaming path whenever n > block_n
+    got = semantic_scores(z, w, b, q, block_n=block_n, interpret=True,
+                          vmem_budget=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    resident = semantic_scores(z, w, b, q, block_n=block_n, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(resident),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_hgnn_infer_engine_serves_and_characterizes(tiny_hg):
+    from repro.launch.serve import build_hgnn_infer
+    from repro.serve.engine import HGNNInferEngine
+
+    cfg = _cfg("han", fused=True)
+    built = build_hgnn_infer(cfg, tiny_hg)
+    engine = HGNNInferEngine(built.executor, built.params, built.batch,
+                             fn=built.fn)
+    logits = engine.infer()
+    assert logits.shape == (40, 3)
+    recs = engine.characterize()
+    assert {"FP", "NA", "SA"} <= set(recs)
+    assert engine.plan.na.layout == "stacked"
