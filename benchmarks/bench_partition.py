@@ -1,0 +1,70 @@
+"""Graph-partitioned execution: cut-ratio vs halo-traffic vs NA time.
+
+Sweeps the partition count K for HAN (stacked metapath layout) and RGCN
+(padded per-relation layout) on IMDB and records, per K:
+
+* the partitioner's quality — ``cut_ratio`` (cut edges / total edges) and the
+  halo volume the cut induces (``halo_rows`` / ``halo_bytes``, priced at the
+  projected-feature width that actually crosses partitions);
+* the cost of the new communication stage — ``gather_halo`` wall time;
+* what partitioning does to the dominant stage — per-partition NA wall time.
+
+K=1 is the degenerate baseline (empty halos, zero cut) so the sweep shows the
+traffic growing with K.  Rows fold into ``BENCH_hgnn.json`` under
+``partition`` (the snapshot ``benchmarks/run.py --check`` gates against).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from benchmarks.common import emit, time_jitted
+from repro.configs.base import HGNNConfig
+from repro.core.characterize import partition_traffic
+from repro.core.models import get_model
+from repro.data.synthetic import make_dataset
+
+CASES = [("han", "imdb"), ("rgcn", "imdb")]
+KS = (1, 2, 4)
+if os.environ.get("BENCH_SMOKE"):  # CI smoke: cheapest case under a timeout
+    CASES = [("rgcn", "imdb")]
+    KS = (1, 4)
+
+
+def run() -> list:
+    rows: list = []
+    for model, ds in CASES:
+        hg = make_dataset(ds)
+        for k in KS:
+            cfg = HGNNConfig(model=model, dataset=ds, hidden=64, n_heads=8,
+                             n_classes=8, max_degree=32, fused=True,
+                             partitions=k)
+            m = get_model(cfg)
+            batch = m.prepare(hg)
+            params = m.init(jax.random.key(0), batch)
+            fns = m.executor.stage_fns(params, batch)
+            na_fn, na_args = fns["NA"]
+            na_us = time_jitted(na_fn, *na_args)
+            if "gather_halo" in fns:
+                gh_fn, gh_args = fns["gather_halo"]
+                halo_us = time_jitted(gh_fn, *gh_args)
+                traffic = partition_traffic(batch["part"], gh_args[0])
+            else:
+                halo_us = 0.0
+                traffic = {"halo_rows": 0.0, "halo_bytes": 0.0,
+                           "cut_edges": 0, "edges_total": 0, "cut_ratio": 0.0}
+            rows.append((
+                f"partition/{model}/{ds}/k{k}/NA", na_us,
+                f"cut_ratio={traffic['cut_ratio']:.4f} "
+                f"cut_edges={traffic['cut_edges']} "
+                f"halo_rows={traffic['halo_rows']:.0f} "
+                f"halo_bytes={traffic['halo_bytes']:.0f}"))
+            rows.append((
+                f"partition/{model}/{ds}/k{k}/gather_halo", halo_us,
+                f"halo_bytes={traffic['halo_bytes']:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,6 +1,8 @@
 #!/usr/bin/env python
 """Docs check: every repo path referenced in README.md / docs/ARCHITECTURE.md
-must exist (CI fails when docs drift from the tree).
+/ docs/CHARACTERIZATION.md must exist (CI fails when docs drift from the
+tree; the CHARACTERIZATION handbook additionally has its own content drift
+check, scripts/gen_characterization.py --check).
 
 A "path reference" is any backtick-quoted or code-block token that looks like
 a repo-relative file or directory (contains a '/' or a known suffix and no
@@ -13,7 +15,7 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-DOCS = ["README.md", "docs/ARCHITECTURE.md"]
+DOCS = ["README.md", "docs/ARCHITECTURE.md", "docs/CHARACTERIZATION.md"]
 
 # `...`-quoted tokens; inside them, path-looking pieces
 INLINE = re.compile(r"`([^`\n]+)`")

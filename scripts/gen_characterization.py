@@ -1,0 +1,265 @@
+#!/usr/bin/env python
+"""Generate docs/CHARACTERIZATION.md from the committed BENCH_hgnn.json.
+
+The handbook reproduces the paper's table/figure story from the recorded
+perf snapshot — stage time breakdown (Fig. 2), per-stage FLOPs / HBM bytes /
+roofline bound (Fig. 3/4), the fused-NA and SA-epilogue optimization
+snapshots (§5 guidelines), and the partitioned-execution halo-traffic sweep
+(beyond-paper, `repro.dist.partition`).  Pure stdlib — no jax import — so CI
+can run it in the docs job.
+
+Usage:
+    python scripts/gen_characterization.py            # (re)write the doc
+    python scripts/gen_characterization.py --check    # fail on drift
+
+`--check` regenerates the doc in memory and exits 1 if it differs from the
+committed file, so the handbook can never drift from the snapshot it claims
+to describe.  Regeneration is deterministic (sorted keys, fixed formats):
+same BENCH_hgnn.json -> byte-identical markdown.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BENCH = ROOT / "BENCH_hgnn.json"
+DOC = ROOT / "docs" / "CHARACTERIZATION.md"
+
+HEADER = """\
+# Characterization handbook
+
+The paper's measurements — *Characterizing and Understanding HGNNs on GPUs*
+(arXiv:2208.04758) — regenerated from this repo's recorded perf snapshot.
+
+> **Generated file — do not edit.**  Source of truth is `BENCH_hgnn.json`
+> (written by `benchmarks/run.py`); this page is rendered by
+> `scripts/gen_characterization.py` and CI fails (`--check`) when the two
+> drift apart.  Wall times are CPU-host numbers from the recording machine —
+> the *shapes* (stage shares, bounds, byte ratios) are the reproducible
+> story, not the absolute microseconds.
+"""
+
+
+def _us(v: float) -> str:
+    """Fixed human format for a microsecond wall time."""
+    if v >= 1e6:
+        return f"{v / 1e6:.2f} s"
+    if v >= 1e3:
+        return f"{v / 1e3:.1f} ms"
+    return f"{v:.0f} us"
+
+
+def _bytes(v: float) -> str:
+    if v >= 1e9:
+        return f"{v / 1e9:.2f} GB"
+    if v >= 1e6:
+        return f"{v / 1e6:.2f} MB"
+    if v >= 1e3:
+        return f"{v / 1e3:.1f} kB"
+    return f"{v:.0f} B"
+
+
+def _stage_breakdown(data: dict) -> list:
+    sb = data.get("stage_breakdown_us")
+    if not sb:
+        return []
+    out = [
+        "",
+        "## Stage time breakdown (paper Fig. 2)",
+        "",
+        "Baseline (DGL-faithful CSR) execution, per stage, from "
+        "`benchmarks/bench_stage_breakdown.py`.  The paper's claim: Neighbor "
+        "Aggregation dominates (74% on average across models and datasets).",
+        "",
+        "| model/dataset | FP | NA | SA | NA share |",
+        "| --- | --- | --- | --- | --- |",
+    ]
+    for case in sorted(sb):
+        st = sb[case]
+        total = sum(st.get(k, 0.0) for k in ("FP", "NA", "SA")) or 1.0
+        cells = [(_us(st[k]) if k in st else "—") for k in ("FP", "NA", "SA")]
+        share = 100.0 * st.get("NA", 0.0) / total
+        out.append(f"| {case} | {cells[0]} | {cells[1]} | {cells[2]} | "
+                   f"{share:.1f}% |")
+    if "avg_na_share_pct" in data:
+        out += ["",
+                f"Average NA share: **{data['avg_na_share_pct']:.1f}%** "
+                "(paper: 74%)."]
+    return out
+
+
+def _stage_char(data: dict) -> list:
+    sc = data.get("stage_characterization")
+    if not sc:
+        return []
+    out = [
+        "",
+        "## Per-stage FLOPs / HBM bytes / roofline bound (paper Fig. 3–4)",
+        "",
+        "From the compiled HLO of the exact stage functions the executor "
+        "serves (`core/characterize.py` cost walker; arithmetic intensity = "
+        "FLOPs / HBM bytes).  The paper's finding: the TB-Type NA gather is "
+        "memory-bound, the DM-Type FP matmul is the only compute-leaning "
+        "stage.",
+        "",
+        "| model/dataset | stage | FLOPs | HBM bytes | AI (FLOP/B) | bound |",
+        "| --- | --- | --- | --- | --- | --- |",
+    ]
+    for case in sorted(sc):
+        for stage in ("FP", "NA", "SA"):
+            if stage not in sc[case]:
+                continue
+            r = sc[case][stage]
+            ai = r["flops"] / r["hbm_bytes"] if r["hbm_bytes"] else 0.0
+            out.append(f"| {case} | {stage} | {r['flops']:.3g} | "
+                       f"{_bytes(r['hbm_bytes'])} | {ai:.3f} | "
+                       f"{r['bound']} |")
+    return out
+
+
+def _na_fused(data: dict) -> list:
+    nf = data.get("na_fused")
+    if not nf:
+        return []
+    out = [
+        "",
+        "## Fused multi-head GAT-NA kernel (guideline §5: kernel fusion)",
+        "",
+        "One Pallas launch per `[P, N, K]` metapath stack (SDDMM + online "
+        "segment-softmax + reduction tree for all heads) vs the CSR "
+        "baseline's per-head kernel chain (`benchmarks/bench_na_fused.py`).",
+        "",
+        "| variant | wall | NA launches |",
+        "| --- | --- | --- |",
+    ]
+    if "baseline_csr_us" in nf:
+        out.append(f"| CSR baseline | {_us(nf['baseline_csr_us'])} | "
+                   "per-head chain |")
+    if "per_head_us" in nf:
+        out.append(f"| padded, per head | {_us(nf['per_head_us'])} | "
+                   f"{nf.get('na_launches_per_head', '—')} |")
+    if "fused_us" in nf:
+        out.append(f"| fused, all heads | {_us(nf['fused_us'])} | "
+                   f"{nf.get('na_launches_fused', '—')} |")
+    tail = []
+    if nf.get("speedup_vs_baseline") is not None:
+        tail.append(f"**{nf['speedup_vs_baseline']:.2f}x** vs the CSR "
+                    "baseline")
+    if nf.get("kernel_max_abs_err") is not None:
+        tail.append(f"kernel-vs-oracle max abs err {nf['kernel_max_abs_err']:.2e}")
+    if tail:
+        out += ["", "Fused speedup: " + "; ".join(tail) + "."]
+    return out
+
+
+def _sa_epilogue(data: dict) -> list:
+    se = data.get("sa_epilogue")
+    if not se:
+        return []
+    out = [
+        "",
+        "## Fused NA→SA epilogue (guideline §5: inter-stage data reuse)",
+        "",
+        "The semantic-score pass-1 partial accumulates inside the NA kernel "
+        "while each `z` tile is in VMEM, so SA reads the `[P, N, D]` stack "
+        "once instead of twice (`benchmarks/bench_sa_epilogue.py`).",
+        "",
+        "| variant | SA wall | SA HBM bytes |",
+        "| --- | --- | --- |",
+    ]
+    if "two_pass_us" in se:
+        out.append(f"| two-pass SA | {_us(se['two_pass_us'])} | "
+                   f"{_bytes(se['two_pass_hbm_bytes'])} |")
+    if "fused_us" in se:
+        out.append(f"| fused epilogue | {_us(se['fused_us'])} | "
+                   f"{_bytes(se['fused_hbm_bytes'])} |")
+    if se.get("z_passes_saved") is not None:
+        out += ["",
+                f"Full `z` HBM passes saved: **{se['z_passes_saved']:.2f}** "
+                f"(one pass = {_bytes(se.get('z_bytes', 0.0))})."]
+    return out
+
+
+def _partition(data: dict) -> list:
+    pt = data.get("partition")
+    if not pt:
+        return []
+    out = [
+        "",
+        "## Partitioned execution: cut ratio vs halo traffic "
+        "(`repro.dist.partition`)",
+        "",
+        "Beyond-paper: the vertex/feature tables split into K edge-cut "
+        "partitions; FP and NA run per-partition and the halo feature "
+        "exchange (`gather_halo` stage) is the only communication "
+        "(`benchmarks/bench_partition.py`).  More partitions cut more edges "
+        "and move more halo bytes — the table is the traffic/parallelism "
+        "trade every multi-chip deployment prices.",
+        "",
+        "| model/dataset | K | cut ratio | cut edges | halo rows | "
+        "halo bytes | gather_halo | NA (per-partition) |",
+        "| --- | --- | --- | --- | --- | --- | --- | --- |",
+    ]
+
+    def sort_key(case):
+        base, _, kpart = case.rpartition("/k")
+        return (base, int(kpart) if kpart.isdigit() else 0)
+
+    for case in sorted(pt, key=sort_key):
+        base, _, kpart = case.rpartition("/k")
+        r = pt[case]
+        out.append(
+            f"| {base} | {kpart} | {r.get('cut_ratio', 0.0):.3f} | "
+            f"{r.get('cut_edges', 0)} | {r.get('halo_rows', 0.0):.0f} | "
+            f"{_bytes(r.get('halo_bytes', 0.0))} | "
+            f"{_us(r['gather_halo_us']) if 'gather_halo_us' in r else '—'} | "
+            f"{_us(r['NA_us']) if 'NA_us' in r else '—'} |")
+    return out
+
+
+def render(data: dict) -> str:
+    lines = [HEADER]
+    lines += _stage_breakdown(data)
+    lines += _stage_char(data)
+    lines += _na_fused(data)
+    lines += _sa_epilogue(data)
+    lines += _partition(data)
+    lines += [
+        "",
+        "## Regenerating",
+        "",
+        "```bash",
+        "# refresh the snapshot (stage breakdown + NA/SA fusion + partition)",
+        "PYTHONPATH=src:. python benchmarks/run.py bench_stage_breakdown \\",
+        "    bench_na_fused bench_sa_epilogue bench_partition",
+        "# re-render this page",
+        "python scripts/gen_characterization.py",
+        "```",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def main() -> int:
+    data = json.loads(BENCH.read_text())
+    text = render(data)
+    if "--check" in sys.argv[1:]:
+        if not DOC.exists():
+            print(f"MISSING  {DOC.relative_to(ROOT)} "
+                  "(run scripts/gen_characterization.py)")
+            return 1
+        if DOC.read_text() != text:
+            print(f"DRIFT    {DOC.relative_to(ROOT)} does not match "
+                  f"{BENCH.name}; run scripts/gen_characterization.py")
+            return 1
+        print(f"characterization handbook OK ({DOC.relative_to(ROOT)})")
+        return 0
+    DOC.write_text(text)
+    print(f"wrote {DOC.relative_to(ROOT)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -167,6 +167,12 @@ class HGNNConfig:
     # pass-1 partial accumulates inside the NA kernel while each z tile is
     # still in VMEM, saving one full [P, N, D] HBM read. Stacked layout only.
     fuse_na_sa: bool = False
+    # Graph-partitioned multi-host execution (repro.dist.partition): >= 1
+    # splits the vertex/feature tables into that many edge-cut partitions —
+    # FP/NA run per-partition on local shards with an explicit halo feature
+    # exchange between them. 0 keeps the single-table execution. Needs the
+    # stacked (HAN) / padded (RGCN) / instances (MAGNN) NA layouts.
+    partitions: int = 0
     seed: int = 0
 
     def replace(self, **kw) -> "HGNNConfig":

@@ -362,6 +362,48 @@ def analyze_hlo_text(text: str) -> Dict:
 
 
 # ---------------------------------------------------------------------------
+# partitioned-execution traffic record
+# ---------------------------------------------------------------------------
+
+
+def partition_traffic(part: Dict, h_own: Dict) -> Dict:
+    """Halo-exchange / edge-cut record for the partitioned execution mode.
+
+    ``part`` is the device batch's partition table (``repro.dist.partition``:
+    ``halo_mask`` per type + host-side ``meta`` counters); ``h_own`` the
+    per-type ``[K, n, ...]`` feature shards entering the ``gather_halo``
+    stage, whose trailing dims price a halo row in bytes.  This is the
+    paper-facing view of the new communication stage — the bytes that cross
+    partitions because an edge was cut — independent of how the exchange is
+    lowered (shard_map all-gather vs GSPMD resharding).
+    """
+    import numpy as np
+
+    halo_rows = 0.0
+    halo_bytes = 0.0
+    for t, m in part["halo_mask"].items():
+        rows = float(np.asarray(m).sum())
+        h = h_own[t]
+        row_bytes = 1.0
+        for d in h.shape[2:]:
+            row_bytes *= d
+        row_bytes *= h.dtype.itemsize
+        halo_rows += rows
+        halo_bytes += rows * row_bytes
+    meta = part["meta"]
+    cut = int(meta["cut_edges"])
+    total = int(meta["edges_total"])
+    return {
+        "k": int(meta["k"]),
+        "halo_rows": halo_rows,
+        "halo_bytes": halo_bytes,
+        "cut_edges": cut,
+        "edges_total": total,
+        "cut_ratio": cut / max(total, 1),
+    }
+
+
+# ---------------------------------------------------------------------------
 # model-level analytics + roofline
 # ---------------------------------------------------------------------------
 

@@ -30,6 +30,9 @@ class GCN(PlannedModel):
         self.target = DATASET_TARGET[cfg.dataset]
 
     def plan(self) -> StagePlan:
+        if self.cfg.partitions >= 1:
+            raise ValueError("gcn runs the homogeneous CSR baseline; it has "
+                             "no partitioned execution layout")
         return StagePlan(
             model="gcn",
             target=self.target,

@@ -26,8 +26,9 @@ from repro.core import metapath as mp
 from repro.core import stages
 from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
-from repro.core.plan import (BUCKETED_BATCH_SPECS, STACKED_BATCH_SPECS,
-                             FPSpec, HeadSpec, NASpec, SASpec, StagePlan)
+from repro.core.plan import (BUCKETED_BATCH_SPECS, PARTITION_BATCH_SPECS,
+                             STACKED_BATCH_SPECS, FPSpec, HeadSpec, NASpec,
+                             PartitionSpec, SASpec, StagePlan)
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
@@ -45,6 +46,14 @@ class HAN(PlannedModel):
             layout = "bucketed"
         else:
             layout = "stacked"
+        part = None
+        if cfg.partitions >= 1:
+            if layout != "stacked":
+                raise ValueError(
+                    "partitioned HAN execution needs the stacked layout "
+                    "(fused=True, no degree buckets); got "
+                    f"layout={layout!r}")
+            part = PartitionSpec(k=cfg.partitions)
         return StagePlan(
             model="han",
             target=self.target,
@@ -52,11 +61,14 @@ class HAN(PlannedModel):
             na=NASpec(kind="gat", layout=layout, activation="elu",
                       use_pallas=cfg.use_pallas),
             sa=SASpec(kind="attention", stacked=cfg.fused,
-                      fuse_epilogue=cfg.fuse_na_sa and layout == "stacked"),
+                      fuse_epilogue=(cfg.fuse_na_sa and layout == "stacked"
+                                     and part is None)),
             head=HeadSpec(kind="linear"),
             metapaths=tuple(tuple(p) for p in self.metapaths),
-            batch_specs=(BUCKETED_BATCH_SPECS if layout == "bucketed"
+            batch_specs=(PARTITION_BATCH_SPECS if part is not None
+                         else BUCKETED_BATCH_SPECS if layout == "bucketed"
                          else STACKED_BATCH_SPECS),
+            partition=part,
         )
 
     # ---------------- Stage 1: Subgraph Build (host) ----------------
@@ -92,4 +104,4 @@ class HAN(PlannedModel):
                 edges.append((jnp.asarray(seg), jnp.asarray(idx)))
             batch["edges"] = edges
         batch["feat_dims"] = {t: hg.feat_dim(t) for t in hg.features}
-        return batch
+        return self._maybe_partition(batch)

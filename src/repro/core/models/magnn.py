@@ -24,8 +24,9 @@ from repro.configs.base import HGNNConfig
 from repro.core import metapath as mp
 from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
-from repro.core.plan import (INSTANCE_BATCH_SPECS, FPSpec, HeadSpec, NASpec,
-                             SASpec, StagePlan)
+from repro.core.plan import (INSTANCE_BATCH_SPECS, PARTITION_BATCH_SPECS,
+                             FPSpec, HeadSpec, NASpec, PartitionSpec, SASpec,
+                             StagePlan)
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
@@ -37,6 +38,8 @@ class MAGNN(PlannedModel):
 
     def plan(self) -> StagePlan:
         cfg = self.cfg
+        part = (PartitionSpec(k=cfg.partitions) if cfg.partitions >= 1
+                else None)
         return StagePlan(
             model="magnn",
             target=self.target,
@@ -46,7 +49,9 @@ class MAGNN(PlannedModel):
             sa=SASpec(kind="attention", stacked=False),
             head=HeadSpec(kind="linear"),
             metapaths=tuple(tuple(p) for p in self.metapaths),
-            batch_specs=INSTANCE_BATCH_SPECS,
+            batch_specs=(PARTITION_BATCH_SPECS if part is not None
+                         else INSTANCE_BATCH_SPECS),
+            partition=part,
         )
 
     # ---------------- Stage 1: Subgraph Build (host, sampled instances) -----
@@ -57,7 +62,7 @@ class MAGNN(PlannedModel):
             mp.enumerate_instances(hg, p, cfg.max_instances, rng=rng)
             for p in self.metapaths
         ]
-        return {
+        return self._maybe_partition({
             "feats": {t: jnp.asarray(f) for t, f in hg.features.items()},
             "feat_dims": {t: hg.feat_dim(t) for t in hg.features},
             # node types per path position are static (plan.metapaths)
@@ -65,4 +70,4 @@ class MAGNN(PlannedModel):
                 (jnp.asarray(ib.nodes), jnp.asarray(ib.mask)) for ib in insts
             ],
             "n_nodes": hg.node_counts[self.target],
-        }
+        })

@@ -23,8 +23,9 @@ from repro.core import metapath as mp
 from repro.core import stages
 from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
-from repro.core.plan import (RELATION_BATCH_SPECS, FPSpec, HeadSpec, NASpec,
-                             SASpec, StagePlan)
+from repro.core.plan import (PARTITION_BATCH_SPECS, RELATION_BATCH_SPECS,
+                             FPSpec, HeadSpec, NASpec, PartitionSpec, SASpec,
+                             StagePlan)
 from repro.data.synthetic import DATASET_TARGET
 
 
@@ -42,6 +43,13 @@ class RGCN(PlannedModel):
             layout = "bucketed"
         else:
             layout = "padded"
+        part = None
+        if cfg.partitions >= 1:
+            if layout != "padded":
+                raise ValueError(
+                    "partitioned RGCN execution needs the padded per-relation "
+                    f"layout (fused=True, no degree buckets); got {layout!r}")
+            part = PartitionSpec(k=cfg.partitions)
         return StagePlan(
             model="rgcn",
             target=self.target,
@@ -49,7 +57,9 @@ class RGCN(PlannedModel):
             na=NASpec(kind="mean", layout=layout, use_pallas=cfg.use_pallas),
             sa=SASpec(kind="rel_sum"),
             head=HeadSpec(kind="select_linear", target=self.target),
-            batch_specs=RELATION_BATCH_SPECS,
+            batch_specs=(PARTITION_BATCH_SPECS if part is not None
+                         else RELATION_BATCH_SPECS),
+            partition=part,
         )
 
     # ---------------- Stage 1: Relation Walk (host) ----------------
@@ -93,4 +103,4 @@ class RGCN(PlannedModel):
             else:
                 seg, idx = stages.csr_to_edges(adj_in.indptr, adj_in.indices)
                 batch["rels"][key] = (jnp.asarray(seg), jnp.asarray(idx))
-        return batch
+        return self._maybe_partition(batch)

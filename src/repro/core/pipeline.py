@@ -9,6 +9,14 @@ builder (:class:`PlannedModel`).
 
 The executor also owns the paper's two structural optimizations:
 
+* **Graph-partitioned execution** (``plan.partition``): the vertex/feature
+  tables are split into K edge-cut partitions (``repro.dist.partition``);
+  FP and NA run per-partition on local shards and the halo feature exchange
+  between them is an explicit ``gather_halo`` stage (shard_map over the
+  BATCH axes when the mesh divides K).  SA runs unchanged on the
+  partition-local stacks — its score pass reduces per-partition partials,
+  so the only other communication is a [K, P]-sized reduce.
+
 * **Fused NA→SA epilogue** (``plan.sa.fuse_epilogue``): on the stacked
   layout the semantic-score pass-1 partial (``mean_n q·tanh(z W + b)``)
   accumulates inside the NA kernel while each ``z`` tile is in VMEM —
@@ -29,6 +37,7 @@ import numpy as np
 
 from repro.core import semantics, stages
 from repro.core.plan import StagePlan
+from repro.dist.sharding import BATCH, MODEL
 
 _ACT = {None: lambda x: x, "elu": jax.nn.elu, "relu": jax.nn.relu}
 
@@ -106,6 +115,8 @@ class StageGraphExecutor:
     # ------------------------------------------------------------------
     def fp(self, params: Dict, batch: Dict):
         plan = self.plan
+        if plan.partition is not None:
+            return self._fp_partitioned(params, batch)
         if plan.fp.kind == "dense":
             return batch["x"] @ params["w1"]
         project = (stages.feature_projection_sharded if plan.fp.sharded
@@ -116,11 +127,43 @@ class StageGraphExecutor:
             return ht.reshape(ht.shape[0], self.cfg.n_heads, -1)  # [N, H, Dh]
         return h
 
+    def _fp_partitioned(self, params: Dict, batch: Dict) -> Dict:
+        """FP over the per-partition owned feature shards: [K, n_t, F_t] @
+        W_t per type — pure data parallelism over the partition dim."""
+        plan = self.plan
+        out: Dict = {}
+        for t, f in batch["part"]["feats"].items():
+            w = params["fp"][t]
+            if plan.fp.sharded:
+                w = stages.shard(w, *stages.HGNN_STAGE_SPECS["fp_weight"])
+            out[t] = stages.shard(f @ w, BATCH, None, MODEL)
+        return out
+
+    # ------------------------------------------------------------------
+    # partitioned flow: the halo feature exchange (the new explicit stage)
+    # ------------------------------------------------------------------
+    def gather_halo(self, batch: Dict, h_own: Dict):
+        """Fetch each type's halo rows from the other partitions' owned
+        tables and append them: local source table = concat(own, halo).
+        The one communication step of the partitioned flow (shard_map
+        all-gather on a dividing mesh; see ``repro.dist.partition``)."""
+        from repro.dist.partition import gather_halo as _gather
+
+        part = batch["part"]
+        mode = self.plan.partition.halo
+        out: Dict = {}
+        for t, h in h_own.items():
+            halo = _gather(h, part["halo_src"][t], mode=mode)
+            out[t] = jnp.concatenate([h, halo], axis=1)
+        return out
+
     # ------------------------------------------------------------------
     # Stage 3: Neighbor Aggregation
     # ------------------------------------------------------------------
     def na(self, params: Dict, batch: Dict, h):
         kind = self.plan.na.kind
+        if self.plan.partition is not None:
+            return self._na_partitioned(params, batch, h)
         if kind == "gat":
             return self._na_gat(params, batch, h)
         if kind == "mean":
@@ -258,11 +301,69 @@ class StageGraphExecutor:
             outs.append(stages.shard(z, *specs["na_flat_out"]))  # [N, D]
         return outs
 
+    def _na_partitioned(self, params: Dict, batch: Dict, h_loc: Dict):
+        """NA over partition-local shards: destinations are the owned rows,
+        sources the concat(own, halo) local tables built by ``gather_halo``.
+        Runs the XLA padded path vmapped over the partition dim (fusing the
+        Pallas kernels into the per-partition body is future work)."""
+        plan, cfg = self.plan, self.cfg
+        part = batch["part"]
+        t = plan.target
+        act = _ACT[plan.na.activation]
+        H = cfg.n_heads
+        if plan.na.kind == "gat":
+            n_own = part["feats"][t].shape[1]
+            heads = lambda x: x.reshape(x.shape[0], x.shape[1], H, -1)
+            hd = heads(h_loc[t][:, :n_own])  # [K, n, H, Dh] owned rows
+            hs = heads(h_loc[t])  # [K, n+halo, H, Dh] local source pool
+
+            def one_part(hd_k, hs_k, nbr_k, mask_k):  # nbr_k [P, n, Kd]
+                return jax.vmap(
+                    lambda pp, nn, mm: stages.gat_aggregate_padded(
+                        pp, hd_k, hs_k, nn, mm),
+                    in_axes=(0, 0, 0))(params["gat"], nbr_k, mask_k)
+
+            z = jax.vmap(one_part)(hd, hs, part["nbr"], part["mask"])
+            z = act(z)  # [K, P, n, H, Dh]
+            z = z.reshape(z.shape[0], z.shape[1], z.shape[2], -1)
+            return stages.shard(z, BATCH, None, None, None)  # [K, P, n, D]
+        if plan.na.kind == "mean":
+            out: Dict = {"__h__": h_loc[t][:, : part["feats"][t].shape[1]]}
+            for key in sorted(part["rels"]):
+                s = key[0]
+                nbr, mask = part["rels"][key]
+                agg = jax.vmap(stages.mean_aggregate_padded)(
+                    h_loc[s], nbr, mask)  # [K, n, D]
+                out["|".join(key)] = agg @ params["w_rel"][key]
+            return out
+        if plan.na.kind == "instance":
+            h_tgt = h_loc[t][:, : part["feats"][t].shape[1]]
+            h_tgt = h_tgt.reshape(h_tgt.shape[0], h_tgt.shape[1], H, -1)
+            outs: List[jax.Array] = []
+            for p_i, (nodes, mask), types in zip(params["att"],
+                                                 part["instances"],
+                                                 plan.metapaths):
+                k_, n, i, l = nodes.shape
+                h_path = jnp.stack(
+                    [jax.vmap(lambda hh, idx: hh[idx])(
+                        h_loc[types[j]], nodes[:, :, :, j])
+                     for j in range(l)], axis=3)  # [K, n, I, L, D]
+                h_path = h_path.reshape(k_, n, i, l, H, -1)
+                enc = jax.vmap(stages.rotate_encoder)(h_path)  # [K, n, I, H, Dh]
+                z = jax.vmap(stages.instance_aggregate, in_axes=(None, 0, 0, 0))(
+                    p_i, h_tgt, enc, mask)
+                outs.append(act(z).reshape(k_, n, -1))  # [K, n, D]
+            return outs
+        raise ValueError(
+            f"no partitioned NA path for kind {plan.na.kind!r}")
+
     # ------------------------------------------------------------------
     # Stage 4: Semantic Aggregation
     # ------------------------------------------------------------------
     def sa(self, params: Dict, batch: Dict, z):
         plan = self.plan
+        if plan.partition is not None:
+            return self._sa_partitioned(params, batch, z)
         if plan.sa.kind == "none":
             return z
         if plan.sa.kind == "rel_sum":
@@ -288,20 +389,50 @@ class StageGraphExecutor:
             return semantics.semantic_attention(params["sem"], z)
         return semantics.semantic_attention_list(params["sem"], z)
 
+    def _sa_partitioned(self, params: Dict, batch: Dict, z):
+        """SA on the partition-local stacks.  Attention reduces per-partition
+        score partials to the global masked mean (a [K, P] reduce is the only
+        communication); rel_sum is fully partition-local."""
+        plan = self.plan
+        part = batch["part"]
+        mask = part["own_mask"][plan.target]  # [K, n]
+        if plan.sa.kind == "rel_sum":
+            h = z["__h__"]  # [K, n, D] owned target rows
+            acc = None
+            for key, v in z.items():
+                if key != "__h__" and key.split("|")[2] == plan.target:
+                    acc = v if acc is None else acc + v
+            h_self = h @ params["w_self"][plan.target]
+            return jax.nn.relu(h_self if acc is None else h_self + acc)
+        # attention (HAN stacked [K, P, n, D]; MAGNN list of [K, n, D])
+        if isinstance(z, list):
+            z = jnp.stack(z, axis=1)  # [K, P, n, D]
+        return semantics.semantic_attention_partitioned(
+            params["sem"], z, mask)  # [K, n, D]
+
     # ------------------------------------------------------------------
     # head + forward
     # ------------------------------------------------------------------
-    def head(self, params: Dict, z) -> jax.Array:
+    def head(self, params: Dict, z, batch: Dict = None) -> jax.Array:
         plan = self.plan
         w = params[plan.head.param]
+        if plan.partition is not None:
+            # SA already reduced to the owned target rows [K, n, D]; classify
+            # locally, then invert the ownership permutation back to global
+            # node order (`inv` maps global row -> flat own-order slot).
+            out = z @ w  # [K, n, C]
+            flat = out.reshape(-1, out.shape[-1])
+            return flat[batch["part"]["inv"]]
         if plan.head.kind == "select_linear":
             return z[plan.head.target] @ w
         return z @ w
 
     def forward(self, params: Dict, batch: Dict) -> jax.Array:
         h = self.fp(params, batch)
+        if self.plan.partition is not None:
+            h = self.gather_halo(batch, h)
         z = self.na(params, batch, h)
-        return self.head(params, self.sa(params, batch, z))
+        return self.head(params, self.sa(params, batch, z), batch)
 
     # ------------------------------------------------------------------
     # per-stage characterization hooks
@@ -312,13 +443,19 @@ class StageGraphExecutor:
         and exposes the NA→SA barrier (paper Fig. 5c)."""
         fp = jax.jit(lambda p: self.fp(p, batch))
         h = fp(params)
+        fns: Dict[str, Tuple] = {"FP": (fp, (params,))}
+        if self.plan.partition is not None:
+            gh = jax.jit(lambda hh: self.gather_halo(batch, hh))
+            fns["gather_halo"] = (gh, (h,))
+            h = gh(h)
         na = jax.jit(lambda p, hh: self.na(p, batch, hh))
         z = na(params, h)
         sa = jax.jit(lambda p, zz: self.sa(p, batch, zz))
         out = sa(params, z)
-        head = jax.jit(lambda p, oo: self.head(p, oo))
-        return {"FP": (fp, (params,)), "NA": (na, (params, h)),
-                "SA": (sa, (params, z)), "head": (head, (params, out))}
+        head = jax.jit(lambda p, oo: self.head(p, oo, batch))
+        fns.update({"NA": (na, (params, h)), "SA": (sa, (params, z)),
+                    "head": (head, (params, out))})
+        return fns
 
     def stage_records(self, params: Dict, batch: Dict,
                       n_chips: int = 1) -> Dict:
@@ -327,10 +464,12 @@ class StageGraphExecutor:
         functions the executor serves.  ``total`` is the stage-additive sum
         (the fully-jitted forward may fuse across stage boundaries, so the
         per-stage attribution is the meaningful decomposition)."""
-        from repro.core.characterize import analyze_hlo_text, roofline
+        from repro.core.characterize import (analyze_hlo_text,
+                                             partition_traffic, roofline)
 
+        fns = self.stage_fns(params, batch)
         recs: Dict[str, Dict] = {}
-        for name, (fn, args) in self.stage_fns(params, batch).items():
+        for name, (fn, args) in fns.items():
             rep = analyze_hlo_text(fn.lower(*args).compile().as_text())
             recs[name] = {
                 "flops": rep["total_flops"],
@@ -343,7 +482,16 @@ class StageGraphExecutor:
             "flops": sum(r["flops"] for r in recs.values()),
             "hbm_bytes": sum(r["hbm_bytes"] for r in recs.values()),
         }
-        return {"stages": recs, "total": total}
+        out = {"stages": recs, "total": total}
+        if "gather_halo" in fns:
+            # the communication stage's paper-facing metrics: exchanged halo
+            # rows/bytes and the partitioner's cut, from the batch metadata
+            # plus the actual per-type feature shapes entering the exchange
+            traffic = partition_traffic(batch["part"], fns["gather_halo"][1][0])
+            recs["gather_halo"]["halo_bytes"] = traffic["halo_bytes"]
+            recs["gather_halo"]["cut_edges"] = traffic["cut_edges"]
+            out["partition"] = traffic
+        return out
 
 
 class PlannedModel:
@@ -367,6 +515,16 @@ class PlannedModel:
     def prepare(self, hg) -> Dict:
         raise NotImplementedError
 
+    def _maybe_partition(self, batch: Dict) -> Dict:
+        """End-of-``prepare`` hook: rewrite the batch into the partitioned
+        layout when the plan declares one (``repro.dist.partition``)."""
+        plan = self.plan()
+        if plan.partition is None:
+            return batch
+        from repro.dist.partition import partition_batch
+
+        return partition_batch(plan, batch)
+
     def init(self, rng: jax.Array, batch: Dict) -> Dict:
         return self.executor.init(rng, batch)
 
@@ -379,8 +537,8 @@ class PlannedModel:
     def sa(self, params: Dict, batch: Dict, z):
         return self.executor.sa(params, batch, z)
 
-    def head(self, params: Dict, z):
-        return self.executor.head(params, z)
+    def head(self, params: Dict, z, batch: Dict = None):
+        return self.executor.head(params, z, batch)
 
     def forward(self, params: Dict, batch: Dict) -> jax.Array:
         return self.executor.forward(params, batch)

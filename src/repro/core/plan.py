@@ -87,6 +87,25 @@ class HeadSpec:
 
 
 @dataclass(frozen=True)
+class PartitionSpec:
+    """Graph-partitioned multi-host execution (``repro.dist.partition``).
+
+    The vertex/feature tables are split into ``k`` edge-cut partitions
+    (metapath-aware target assignment, reference-majority source assignment);
+    FP and NA run per-partition on local shards, and the only communication
+    is the explicit halo feature exchange (``gather_halo`` stage) between
+    them.  ``k`` rides the leading array dim of every partitioned batch
+    table and shards over the BATCH axes (``PARTITION_BATCH_SPECS``).
+    """
+
+    k: int  # number of graph partitions (>= 1; 1 = trivial, empty halos)
+    # halo exchange implementation: "auto" = shard_map all-gather when the
+    # mesh's BATCH axes divide k, flat gather otherwise; "xla" forces the
+    # flat gather (GSPMD resolves the cross-shard traffic from constraints).
+    halo: str = "auto"
+
+
+@dataclass(frozen=True)
 class StagePlan:
     """One model's whole execution, declared as data.
 
@@ -104,6 +123,8 @@ class StagePlan:
     metapaths: Tuple[Tuple[str, ...], ...] = ()
     batch_specs: Tuple[ShardRule, ...] = ()
     param_specs: Tuple[ShardRule, ...] = (("fp", 2, (None, MODEL)),)
+    # Graph-partitioned execution mode (None = single-table execution).
+    partition: Optional[PartitionSpec] = None
 
     @property
     def shards_on_mesh(self) -> bool:
@@ -128,4 +149,13 @@ RELATION_BATCH_SPECS: Tuple[ShardRule, ...] = (
 INSTANCE_BATCH_SPECS: Tuple[ShardRule, ...] = (
     ("instances", 3, (BATCH, None, None)),  # [N, I, L] instance node tables
     ("instances", 2, (BATCH, None)),  # [N, I] instance masks
+)
+# Partitioned batches: every table under batch["part"] leads with the
+# partition dim K, which shards over the BATCH axes (one partition — or a
+# contiguous block of partitions — per data-parallel shard).  The 1-d
+# leaves (the output inverse permutation) stay replicated.
+PARTITION_BATCH_SPECS: Tuple[ShardRule, ...] = (
+    ("part", 4, (BATCH, None, None, None)),  # [K, P, n, Kd] / [K, n, I, L]
+    ("part", 3, (BATCH, None, None)),  # [K, n, F] feats / [K, n, Kd] rels
+    ("part", 2, (BATCH, None)),  # [K, n] masks / [K, H] halo maps
 )

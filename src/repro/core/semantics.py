@@ -43,6 +43,25 @@ def semantic_attention_list(p: Dict[str, jax.Array], z_list: List[jax.Array]) ->
     return semantic_attention(p, z)
 
 
+def semantic_attention_partitioned(
+    p: Dict[str, jax.Array], z: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Semantic attention over partition-local stacks.
+
+    ``z``: [K, P, n, D] per-partition NA outputs (padded rows masked by
+    ``mask`` [K, n]).  Pass 1 reduces to per-partition partial score sums —
+    the cross-partition reduce of a [K, P] array is the only communication —
+    and the global masked mean equals the unpartitioned ``mean(axis=1)``
+    exactly (pad rows contribute nothing).  Pass 2 (the weighted combine)
+    stays partition-local.  Returns [K, n, D].
+    """
+    s = jnp.tanh(z @ p["W"] + p["b"])  # [K, P, n, H]
+    sc = jnp.einsum("kpnh,h->kpn", s, p["q"]) * mask[:, None, :]
+    w = sc.sum(axis=(0, 2)) / jnp.maximum(mask.sum(), 1.0)  # [P] global mean
+    beta = jax.nn.softmax(w)
+    return jnp.einsum("p,kpnd->knd", beta, z)  # partition-local combine
+
+
 def semantic_sum(z: jax.Array) -> jax.Array:
     """RGCN SA: plain sum across relations (paper: Reduce kernel, no attention)."""
     return z.sum(axis=0)

@@ -9,6 +9,11 @@ Two modules:
 * :mod:`repro.dist.param_sharding` — ``param_specs``: walk a parameter pytree
   and assign a ``NamedSharding`` per leaf (TP over 'model', optional FSDP
   over 'data', EP for expert weights, replication for small vectors).
+* :mod:`repro.dist.partition`      — graph-partitioned multi-host execution:
+  the metapath-aware edge-cut partitioner (per-type vertex assignment,
+  halo/ghost-vertex index maps, per-partition relabeling) and the
+  ``gather_halo`` feature exchange (shard_map over the BATCH axes).
+  Imported lazily by the executor — it pulls in jax.experimental.
 """
 from repro.dist.sharding import (  # noqa: F401
     BATCH,

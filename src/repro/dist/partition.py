@@ -1,0 +1,462 @@
+"""Graph-partitioned multi-host execution (host-side partitioner + halo exchange).
+
+The paper's dominant stage — Neighbor Aggregation — is bound by irregular
+neighbor traffic, which at serving scale means the vertex/feature tables must
+be *partitioned* across hosts rather than replicated (HiHGNN, arXiv:2307.12765;
+the training characterization, arXiv:2407.11790, shows inter-device neighbor
+exchange becoming the bottleneck once graphs outgrow one device).  This module
+owns everything the partitioned execution mode needs:
+
+* **Per-type vertex assignment** — a metapath-aware greedy edge-cut
+  partitioner (:func:`edge_cut_assign`) for the target type (vertices sharing
+  metapath neighbors co-locate, so shared source rows are fetched once), and a
+  reference-majority assignment (:func:`reference_assign`) for every other
+  gathered type (a vertex lives where most of its readers live).
+* **Halo / ghost-vertex index maps** — per partition and per type, the set of
+  non-owned vertices its local Neighbor Aggregation reads.  Halos are ragged
+  across partitions; they are padded per type to a uniform ``[K, H_max]``
+  table of *flat own-order indices* (``owner * n_max + local``) so the halo
+  feature exchange is one gather over the stacked owned tables.
+* **Per-partition relabeling** — neighbor / relation / instance tables are
+  rewritten from global vertex ids into partition-local coordinates
+  (``0..n_max-1`` = owned rows, ``n_max..`` = halo rows), so every NA gather
+  in the partitioned flow is local to ``concat(own, halo)``.
+* **The halo exchange itself** — :func:`gather_halo`: on a mesh whose BATCH
+  axes divide ``K`` it runs as an explicit ``shard_map`` over the partition
+  dim (``all_gather`` of the owned shards + a local gather — the one
+  communication step of the partitioned flow); otherwise it degrades to a
+  plain flat gather whose cross-shard traffic XLA resolves from the sharding
+  constraints (and which is a no-op resharding-wise off-mesh, so
+  single-device parity tests run the exact same math).
+
+``partition_batch`` is the entry point: it post-processes a model's prepared
+(unpartitioned) device batch into the partitioned layout declared by
+``plan.partition`` (a :class:`repro.core.plan.PartitionSpec`), covering the
+``stacked`` (HAN), ``padded`` relational (RGCN) and ``instances`` (MAGNN)
+NA layouts.  Everything here except :func:`gather_halo` runs on the host
+(numpy) as part of Subgraph Build — exactly where the paper places stage 1.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import BATCH, current_mesh, shard
+
+
+# ---------------------------------------------------------------------------
+# vertex assignment
+# ---------------------------------------------------------------------------
+
+
+def edge_cut_assign(neigh: Sequence[np.ndarray], n_tokens: int,
+                    k: int) -> np.ndarray:
+    """Greedy streaming edge-cut assignment of ``len(neigh)`` vertices.
+
+    ``neigh[v]`` lists the (type-offset) tokens vertex ``v``'s Neighbor
+    Aggregation reads.  LDG-style greedy: assign ``v`` to the partition whose
+    already-assigned vertices share the most tokens with it, damped by a load
+    penalty and hard-capped at ``ceil(n / k)`` — co-locating vertices that
+    read the same source rows is what shrinks both the cut and the halo.
+    Deterministic (ties break toward the lighter, lower-indexed partition).
+    """
+    n = len(neigh)
+    cap = -(-n // k) if n else 1
+    owner = np.zeros(n, np.int32)
+    loads = np.zeros(k, np.float64)
+    # token -> per-partition count of assigned vertices that read it
+    counts = np.zeros((max(n_tokens, 1), k), np.float64)
+    for v in range(n):
+        toks = neigh[v]
+        if toks.size:
+            score = counts[toks].sum(axis=0)
+        else:
+            score = np.zeros(k)
+        score = score * (1.0 - loads / cap) - 1e-9 * loads
+        score[loads >= cap] = -np.inf
+        j = int(np.argmax(score))
+        owner[v] = j
+        loads[j] += 1.0
+        if toks.size:
+            counts[toks, j] += 1.0
+    return owner
+
+
+def reference_assign(votes: np.ndarray, k: int) -> np.ndarray:
+    """Assign source-type vertices by reference majority.
+
+    ``votes[v, j]`` counts how many partition-``j`` destination rows read
+    vertex ``v``; each vertex goes to its strongest reader (capacity-bounded
+    at ``ceil(n / k)``, strongest-preference vertices placed first), so a row
+    read mostly by one partition is *owned* there and never crosses the wire.
+    Unreferenced vertices fill the lightest partitions.
+    """
+    n = votes.shape[0]
+    cap = -(-n // k) if n else 1
+    owner = np.zeros(n, np.int32)
+    loads = np.zeros(k, np.int64)
+    order = np.argsort(-votes.max(axis=1), kind="stable")
+    for v in order:
+        pref = np.argsort(-(votes[v] - 1e-9 * loads), kind="stable")
+        for j in pref:
+            if loads[j] < cap:
+                owner[v] = j
+                loads[j] += 1
+                break
+    return owner
+
+
+# ---------------------------------------------------------------------------
+# per-type partition + halo tables
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TypePartition:
+    """One node type's vertex assignment in own-order coordinates."""
+
+    owner: np.ndarray  # [N] int32 partition id per global vertex
+    local: np.ndarray  # [N] int32 position within the owner's table
+    own: np.ndarray  # [K, n_max] int32 global ids (0-padded)
+    own_mask: np.ndarray  # [K, n_max] float32 {0,1}
+
+    @property
+    def n_max(self) -> int:
+        return self.own.shape[1]
+
+    @property
+    def flat(self) -> np.ndarray:
+        """[N] flat own-order index (``owner * n_max + local``)."""
+        return (self.owner.astype(np.int64) * self.n_max
+                + self.local.astype(np.int64))
+
+
+def build_type_partition(owner: np.ndarray, k: int) -> TypePartition:
+    n = len(owner)
+    sizes = np.bincount(owner, minlength=k) if n else np.zeros(k, np.int64)
+    n_max = max(int(sizes.max()) if n else 0, 1)
+    own = np.zeros((k, n_max), np.int32)
+    own_mask = np.zeros((k, n_max), np.float32)
+    local = np.zeros(n, np.int32)
+    for j in range(k):
+        rows = np.flatnonzero(owner == j)
+        own[j, : len(rows)] = rows
+        own_mask[j, : len(rows)] = 1.0
+        local[rows] = np.arange(len(rows), dtype=np.int32)
+    return TypePartition(owner.astype(np.int32), local, own, own_mask)
+
+
+def build_halo(tp: TypePartition, referenced: Sequence[np.ndarray],
+               k: int) -> Tuple[np.ndarray, np.ndarray, List[np.ndarray]]:
+    """Halo index maps for one type: per partition, the non-owned vertices it
+    reads, padded to ``[K, H_max]`` *flat own-order* indices + mask.  Also
+    returns the raw per-partition halo id lists (relabeling needs them)."""
+    halos: List[np.ndarray] = []
+    for j in range(k):
+        refs = np.unique(referenced[j]).astype(np.int64)
+        halos.append(refs[tp.owner[refs] != j])
+    h_max = max((len(h) for h in halos), default=0)
+    halo_src = np.zeros((k, h_max), np.int32)
+    halo_mask = np.zeros((k, h_max), np.float32)
+    for j, hj in enumerate(halos):
+        if len(hj):
+            halo_src[j, : len(hj)] = tp.flat[hj]
+            halo_mask[j, : len(hj)] = 1.0
+    return halo_src, halo_mask, halos
+
+
+def local_lut(tp: TypePartition, halos: Sequence[np.ndarray],
+              k: int) -> np.ndarray:
+    """``lut[j, g]`` = partition-``j`` local coordinate of global vertex ``g``
+    (owned rows first, halo rows appended after ``n_max``); ``-1`` where the
+    vertex is neither owned nor in the halo (never referenced by ``j``)."""
+    n = len(tp.owner)
+    lut = np.full((k, max(n, 1)), -1, np.int64)
+    for j in range(k):
+        rows = np.flatnonzero(tp.owner == j)
+        lut[j, rows] = tp.local[rows]
+        if len(halos[j]):
+            lut[j, halos[j]] = tp.n_max + np.arange(len(halos[j]))
+    return lut
+
+
+# ---------------------------------------------------------------------------
+# the halo feature exchange (device side)
+# ---------------------------------------------------------------------------
+
+
+def gather_halo(h_own: jax.Array, halo_src: jax.Array,
+                mode: str = "auto") -> jax.Array:
+    """Fetch halo feature rows from the stacked owned tables.
+
+    ``h_own``: ``[K, n_max, ...]`` per-partition owned features;
+    ``halo_src``: ``[K, H_max]`` flat own-order indices (``owner * n_max +
+    local``).  Returns ``[K, H_max, ...]``.
+
+    With an active mesh whose BATCH axes divide ``K`` (and ``mode="auto"``),
+    this is an explicit ``shard_map`` over the partition dim: each shard
+    ``all_gather``s the owned tables once and gathers its halo rows locally —
+    the single communication step of the partitioned flow.  Otherwise
+    (``mode="xla"``, off-mesh, or a non-dividing mesh) it is a flat gather
+    whose cross-shard traffic the partitioner leaves to GSPMD.
+    """
+    k, n = h_own.shape[:2]
+    tail = h_own.shape[2:]
+    mesh = current_mesh()
+    if mode == "auto" and mesh is not None:
+        names = [a for a in BATCH if a in mesh.axis_names]
+        size = math.prod(mesh.shape[a] for a in names) if names else 0
+        if names and size > 1 and k % size == 0 and halo_src.shape[1] > 0:
+            ax = tuple(names) if len(names) > 1 else names[0]
+
+            def body(h, idx):
+                h_all = jax.lax.all_gather(h, ax, axis=0, tiled=True)
+                return h_all.reshape((k * n,) + tail)[idx]
+
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(P(ax, *([None] * (len(tail) + 1))), P(ax, None)),
+                out_specs=P(ax, *([None] * (len(tail) + 1))),
+                check_rep=False,
+            )(h_own, halo_src)
+    flat = h_own.reshape((k * n,) + tail)
+    out = flat[halo_src]
+    return shard(out, BATCH, *([None] * (len(tail) + 1)))
+
+
+# ---------------------------------------------------------------------------
+# batch partitioning (host side, per NA layout)
+# ---------------------------------------------------------------------------
+
+
+def partition_batch(plan, batch: Dict) -> Dict:
+    """Post-process a prepared (unpartitioned) device batch into the
+    partitioned layout declared by ``plan.partition``.  Dispatches on the
+    NA layout; raises for layouts with no partitioned execution mode
+    (csr baselines, degree-bucketed tiles)."""
+    spec = plan.partition
+    if spec is None:
+        return batch
+    if plan.na.layout == "stacked":
+        return _partition_stacked(plan, batch, spec.k)
+    if plan.na.layout == "padded" and plan.na.kind == "mean":
+        return _partition_relational(plan, batch, spec.k)
+    if plan.na.layout == "instances":
+        return _partition_instances(plan, batch, spec.k)
+    raise ValueError(
+        f"partitioned execution supports the stacked / padded / instances NA "
+        f"layouts, not {plan.na.layout!r} (model {plan.model!r}): baselines "
+        "and degree-bucketed tiles have no per-partition relabeling")
+
+
+def _part_feats(feats: np.ndarray, tp: TypePartition) -> np.ndarray:
+    """Distribute raw feature rows to their owners ([K, n_max, F], zero-pad)."""
+    return (feats[tp.own] * tp.own_mask[..., None]).astype(feats.dtype)
+
+
+EdgeLists = Dict[str, List[Tuple[np.ndarray, np.ndarray]]]
+
+
+def _source_partitions(
+    tp_t: TypePartition, edge_lists: EdgeLists, counts: Dict[str, int],
+    k: int, tps: Dict[str, TypePartition],
+) -> Tuple[Dict, Dict, Dict, int, int]:
+    """The shared middle of every layout's partitioning: assign each gathered
+    source type, build its halo tables and relabeling LUTs, count the cut.
+
+    ``edge_lists``: type -> list of ``(dst_global, src_global)`` mask-valid
+    edge arrays (dst indexes the target type).  Types already in ``tps`` (the
+    target itself, self-relations) keep their assignment; the rest are
+    reference-majority assigned.  Returns per-type ``(halo_src, halo_mask,
+    luts)`` plus the ``(cut_edges, edges_total)`` counters.
+    """
+    halo_src: Dict[str, np.ndarray] = {}
+    halo_mask: Dict[str, np.ndarray] = {}
+    luts: Dict[str, np.ndarray] = {}
+    cut = total = 0
+    for s in sorted(edge_lists):
+        pairs = edge_lists[s]
+        if s not in tps:
+            votes = np.zeros((counts[s], k), np.float64)
+            for dst, src in pairs:
+                np.add.at(votes, (src, tp_t.owner[dst]), 1.0)
+            tps[s] = build_type_partition(reference_assign(votes, k), k)
+        referenced = []
+        for j in range(k):
+            ids = [src[tp_t.owner[dst] == j] for dst, src in pairs]
+            referenced.append(np.unique(np.concatenate(ids)) if ids
+                              else np.zeros(0, np.int64))
+        hs, hm, halos = build_halo(tps[s], referenced, k)
+        halo_src[s], halo_mask[s] = hs, hm
+        luts[s] = local_lut(tps[s], halos, k)
+        for dst, src in pairs:
+            cut += int((tps[s].owner[src] != tp_t.owner[dst]).sum())
+            total += len(dst)
+    return halo_src, halo_mask, luts, cut, total
+
+
+def _part_tables(tps: Dict[str, TypePartition], halo_src: Dict,
+                 halo_mask: Dict, feats: Dict, tp_t: TypePartition, k: int,
+                 cut: int, total: int) -> Dict:
+    """The layout-independent slice of the ``part`` dict (per-type owned
+    feature shards + ownership/halo maps + the output inverse permutation)."""
+    return {
+        "feats": {s: jnp.asarray(_part_feats(np.asarray(feats[s]), tps[s]))
+                  for s in sorted(tps)},
+        "own": {s: jnp.asarray(tps[s].own) for s in sorted(tps)},
+        "own_mask": {s: jnp.asarray(tps[s].own_mask) for s in sorted(tps)},
+        "halo_src": {s: jnp.asarray(halo_src[s]) for s in sorted(halo_src)},
+        "halo_mask": {s: jnp.asarray(halo_mask[s])
+                      for s in sorted(halo_mask)},
+        "inv": jnp.asarray(tp_t.flat.astype(np.int32)),
+        "meta": {"k": k, "cut_edges": cut, "edges_total": total},
+    }
+
+
+def _partition_stacked(plan, batch: Dict, k: int) -> Dict:
+    """HAN's ``[P, N, Kd]`` stacked metapath layout: destination = source =
+    target type; one halo table; neighbor stack relabeled per partition."""
+    nbr = np.asarray(batch["nbr"])
+    mask = np.asarray(batch["mask"])
+    p_, n, kd = nbr.shape
+    t = plan.target
+    valid = mask > 0
+    neigh = [np.unique(nbr[:, v][valid[:, v]]) for v in range(n)]
+    tp = build_type_partition(edge_cut_assign(neigh, n, k), k)
+    tps = {t: tp}
+    pi, ni, ki = np.nonzero(valid)
+    halo_src, halo_mask, luts, cut, total = _source_partitions(
+        tp, {t: [(ni, nbr[pi, ni, ki])]}, {t: n}, k, tps)
+    nbr_p = np.zeros((k, p_, tp.n_max, kd), np.int32)
+    mask_p = np.zeros((k, p_, tp.n_max, kd), np.float32)
+    for j in range(k):
+        rows = np.flatnonzero(tp.owner == j)
+        nbr_p[j, :, : len(rows)] = np.maximum(luts[t][j, nbr[:, rows]], 0)
+        mask_p[j, :, : len(rows)] = mask[:, rows]
+    part = _part_tables(tps, halo_src, halo_mask, batch["feats"], tp, k,
+                        cut, total)
+    part["nbr"] = jnp.asarray(nbr_p)
+    part["mask"] = jnp.asarray(mask_p)
+    return {
+        "feat_dims": batch["feat_dims"],
+        "n_nodes": batch["n_nodes"],
+        "part": part,
+    }
+
+
+def _partition_relational(plan, batch: Dict, k: int) -> Dict:
+    """RGCN's per-relation ``[N_d, Kd]`` padded layout: only relations into
+    the target type feed the head; the target is edge-cut-assigned, every
+    source type reference-assigned, one halo table per source type."""
+    t = plan.target
+    rels = {key: (np.asarray(v[0]), np.asarray(v[1]))
+            for key, v in batch["rels"].items() if key[2] == t}
+    counts = {ty: int(c) for ty, c in batch["counts"].items()}
+    n = counts[t]
+    src_types = sorted({key[0] for key in rels})
+    offs, off = {}, 0
+    for s in src_types:
+        offs[s] = off
+        off += counts[s]
+    neigh = []
+    for v in range(n):
+        toks = [r_nbr[v][r_mask[v] > 0] + offs[key[0]]
+                for key, (r_nbr, r_mask) in sorted(rels.items())]
+        neigh.append(np.unique(np.concatenate(toks)) if toks
+                     else np.zeros(0, np.int64))
+    tp_t = build_type_partition(edge_cut_assign(neigh, max(off, 1), k), k)
+    tps: Dict[str, TypePartition] = {t: tp_t}  # self-relations reuse it
+    edge_lists: EdgeLists = {t: []}  # target always gets a (maybe empty) halo
+    for key, (r_nbr, r_mask) in sorted(rels.items()):
+        di, ci = np.nonzero(r_mask > 0)
+        edge_lists.setdefault(key[0], []).append((di, r_nbr[di, ci]))
+    halo_src, halo_mask, luts, cut, total = _source_partitions(
+        tp_t, edge_lists, counts, k, tps)
+    rels_p: Dict = {}
+    for key, (r_nbr, r_mask) in rels.items():
+        s = key[0]
+        kd = r_nbr.shape[1]
+        nbr_p = np.zeros((k, tp_t.n_max, kd), np.int32)
+        mask_p = np.zeros((k, tp_t.n_max, kd), np.float32)
+        for j in range(k):
+            rows = np.flatnonzero(tp_t.owner == j)
+            nbr_p[j, : len(rows)] = np.maximum(luts[s][j, r_nbr[rows]], 0)
+            mask_p[j, : len(rows)] = r_mask[rows]
+        rels_p[key] = (jnp.asarray(nbr_p), jnp.asarray(mask_p))
+    part = _part_tables(tps, halo_src, halo_mask, batch["feats"], tp_t, k,
+                        cut, total)
+    part["rels"] = rels_p
+    return {
+        "feat_dims": batch["feat_dims"],
+        "counts": batch["counts"],
+        # keys only (init splits w_rel per sorted key); tables live in `part`
+        "rels": {key: () for key in batch["rels"]},
+        "part": part,
+    }
+
+
+def _partition_instances(plan, batch: Dict, k: int) -> Dict:
+    """MAGNN's sampled ``[N, I, L]`` instance tables: every path position is a
+    typed gather, so each referenced type gets its own halo table and the
+    instance node ids relabel per position through that type's LUT."""
+    t = plan.target
+    insts = [(np.asarray(nodes), np.asarray(m))
+             for nodes, m in batch["instances"]]
+    counts = {ty: int(f.shape[0]) for ty, f in batch["feats"].items()}
+    n = counts[t]
+    types_used = sorted({ty for path in plan.metapaths for ty in path})
+    offs, off = {}, 0
+    for ty in types_used:
+        offs[ty] = off
+        off += counts[ty]
+    neigh = []
+    for v in range(n):
+        toks = []
+        for (nodes, m), path in zip(insts, plan.metapaths):
+            rows = nodes[v][m[v] > 0]  # [i_valid, L]
+            for j, ty in enumerate(path):
+                if j == 0:
+                    continue  # position 0 is the target row itself
+                toks.append(rows[:, j].astype(np.int64) + offs[ty])
+        neigh.append(np.unique(np.concatenate(toks)) if toks
+                     else np.zeros(0, np.int64))
+    tp_t = build_type_partition(edge_cut_assign(neigh, max(off, 1), k), k)
+    tps: Dict[str, TypePartition] = {t: tp_t}
+    edge_lists: EdgeLists = {t: []}  # target always gets a (maybe empty) halo
+    for (nodes, m), path in zip(insts, plan.metapaths):
+        di, ii = np.nonzero(m > 0)
+        for j, ty in enumerate(path):
+            if j == 0:
+                continue  # position 0 is the (owned) target row itself
+            edge_lists.setdefault(ty, []).append((di, nodes[di, ii, j]))
+    halo_src, halo_mask, luts, cut, total = _source_partitions(
+        tp_t, edge_lists, counts, k, tps)
+    insts_p = []
+    for (nodes, m), path in zip(insts, plan.metapaths):
+        _, i, l = nodes.shape
+        nodes_p = np.zeros((k, tp_t.n_max, i, l), np.int32)
+        mask_p = np.zeros((k, tp_t.n_max, i), np.float32)
+        for part_j in range(k):
+            rows = np.flatnonzero(tp_t.owner == part_j)
+            relab = np.stack(
+                [np.maximum(luts[path[j]][part_j, nodes[rows][:, :, j]], 0)
+                 for j in range(l)], axis=-1)
+            nodes_p[part_j, : len(rows)] = relab
+            mask_p[part_j, : len(rows)] = m[rows]
+        insts_p.append((jnp.asarray(nodes_p), jnp.asarray(mask_p)))
+    part = _part_tables(tps, halo_src, halo_mask, batch["feats"], tp_t, k,
+                        cut, total)
+    part["instances"] = insts_p
+    return {
+        "feat_dims": batch["feat_dims"],
+        "n_nodes": batch["n_nodes"],
+        "part": part,
+    }

@@ -131,7 +131,8 @@ def run_hgnn(args) -> None:
     cfg = HGNNConfig(model=args.hgnn, dataset=args.dataset, fused=True,
                      use_pallas=args.use_pallas,
                      degree_buckets=args.degree_buckets,
-                     fuse_na_sa=args.fuse_na_sa)
+                     fuse_na_sa=args.fuse_na_sa,
+                     partitions=args.partitions)
     hg = make_dataset(args.dataset)
     mesh = None
     if args.mesh_data * args.mesh_model > 1:
@@ -147,14 +148,26 @@ def run_hgnn(args) -> None:
     mesh_desc = (f"{dict(zip(mesh.axis_names, mesh.devices.shape))}"
                  if mesh else "single-device")
     na = built.plan.na
+    part = built.plan.partition
     print(f"{cfg.model}/{cfg.dataset} [na={na.kind}/{na.layout}"
-          f"{' +fused-sa' if built.plan.sa.fuse_epilogue else ''}] "
+          f"{' +fused-sa' if built.plan.sa.fuse_epilogue else ''}"
+          f"{f' +partitions={part.k}' if part is not None else ''}] "
           f"logits {logits.shape} on {mesh_desc}: {dt*1e3:.2f} ms/iter")
     if args.characterize:
-        for stage, rec in engine.characterize().items():
+        # one stage_records call covers both the per-stage table and the
+        # partition summary (lower+compile+HLO walk per stage is expensive)
+        recs = built.executor.stage_records(built.params, built.batch)
+        for stage, rec in recs["stages"].items():
+            extra = (f" halo_bytes={rec['halo_bytes']:.3g}"
+                     if "halo_bytes" in rec else "")
             print(f"  {stage}: flops={rec['flops']:.3g} "
                   f"hbm_bytes={rec['hbm_bytes']:.3g} "
-                  f"bound={rec['roofline']['bound']}")
+                  f"bound={rec['roofline']['bound']}{extra}")
+        if "partition" in recs:
+            pt = recs["partition"]
+            print(f"  partition: k={pt['k']} cut_ratio={pt['cut_ratio']:.3f} "
+                  f"halo_rows={pt['halo_rows']:.0f} "
+                  f"halo_bytes={pt['halo_bytes']:.3g}")
 
 
 def main() -> None:
@@ -180,6 +193,10 @@ def main() -> None:
     ap.add_argument("--degree-buckets", type=int, default=0,
                     help=">1: degree-bucketed padded NA layout "
                          "(HAN metapaths + RGCN per-relation tables)")
+    ap.add_argument("--partitions", type=int, default=0,
+                    help=">=1: graph-partitioned execution with that many "
+                         "edge-cut partitions (per-partition FP/NA + explicit "
+                         "halo feature exchange; repro.dist.partition)")
     ap.add_argument("--fuse-na-sa", action="store_true",
                     help="fused NA→SA epilogue: SA pass-1 scores accumulate "
                          "inside the NA kernel (stacked layout)")
