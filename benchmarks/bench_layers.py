@@ -1,0 +1,94 @@
+"""Depth sweep: how the stage mix scales when HGNN layers stack.
+
+The follow-up characterization ("Characterizing and Understanding HGNN
+Training on GPUs", arXiv:2407.11790) shows the NA/SA share and memory
+traffic shift with model depth; this module records that story for this
+repro's L-layer execution (`HGNNConfig.layers`):
+
+* per-layer stage walls (`L{i}.FP/NA/SA`, plain FP/NA/SA at L=1) with the
+  layer's NA share derived at render time;
+* per-layer characterization records (FLOPs / HBM bytes from the compiled
+  stage HLO — deterministic, so `run.py --check` gates them);
+* the partitioned arm's halo traffic: the halo maps are graph-invariant,
+  so an L-layer stack re-exchanges the updated features every layer and
+  total traffic is halo-bytes × L (`layers/<case>/halo` rows, K=4).
+
+Rows fold into ``BENCH_hgnn.json`` under ``layers``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from benchmarks.common import emit, time_jitted
+from repro.configs.base import HGNNConfig
+from repro.core.characterize import analyze_hlo_text, partition_traffic
+from repro.core.models import get_model
+from repro.data.synthetic import make_dataset
+
+CASES = [("han", "imdb"), ("rgcn", "imdb")]
+DEPTHS = (1, 2, 3)
+HALO_K = 4
+if os.environ.get("BENCH_SMOKE"):  # CI smoke: cheapest case under a timeout
+    CASES = [("rgcn", "imdb")]
+    DEPTHS = (1, 2)
+
+
+def run() -> list:
+    rows: list = []
+    for model, ds in CASES:
+        hg = make_dataset(ds)
+        # the partitioner output is depth-invariant up to its single-vs-
+        # multi-layer variant (RGCN relabels every relation when L > 1), so
+        # the pure-Python edge-cut prepare runs once per variant, not per L
+        part_cache: dict = {}
+        for depth in DEPTHS:
+            cfg = HGNNConfig(model=model, dataset=ds, hidden=64, n_heads=8,
+                             n_classes=8, max_degree=32, fused=True,
+                             layers=depth)
+            m = get_model(cfg)
+            batch = m.prepare(hg)
+            params = m.init(jax.random.key(0), batch)
+            fns = m.executor.stage_fns(params, batch)
+            stage_names = [n for n in fns if n != "head"]
+            times = {n: time_jitted(fn, *args)
+                     for n, (fn, args) in fns.items() if n != "head"}
+            for n in stage_names:
+                rows.append((f"layers/{model}/{ds}/L{depth}/{n}",
+                             times[n], ""))
+            # characterization AFTER the walls so compiles never skew them
+            for n in stage_names:
+                fn, args = fns[n]
+                rep = analyze_hlo_text(fn.lower(*args).compile().as_text())
+                rows.append((f"layers/{model}/{ds}/L{depth}/char/{n}", 0.0,
+                             f"flops={rep['total_flops']:.6g} "
+                             f"hbm_bytes={rep['total_hbm_bytes']:.6g}"))
+            # partitioned arm: per-layer halo re-exchange -> traffic x L.
+            # Only layer-0 FP runs here — it yields the per-type feature
+            # shards whose widths price a halo row, and every layer's
+            # exchange moves the same hidden-width tables over the same
+            # graph-invariant maps, so the depth just multiplies.
+            # only RGCN's padded relational layout has a distinct multi-
+            # layer partitioner; HAN's stacked tables are depth-invariant
+            variant = model == "rgcn" and depth > 1
+            if variant not in part_cache:
+                cfg_p = cfg.replace(partitions=HALO_K)
+                m_p = get_model(cfg_p)
+                batch_p = m_p.prepare(hg)
+                params_p = m_p.init(jax.random.key(0), batch_p)
+                part_cache[variant] = (batch_p["part"],
+                                       m_p.fp(params_p, batch_p))
+            part, h_own = part_cache[variant]
+            traffic = partition_traffic(part, h_own, layers=depth)
+            rows.append((
+                f"layers/{model}/{ds}/L{depth}/halo", 0.0,
+                f"k={HALO_K} layers={traffic['layers']} "
+                f"halo_bytes={traffic['halo_bytes']:.0f} "
+                f"halo_bytes_total={traffic['halo_bytes_total']:.0f} "
+                f"cut_edges={traffic['cut_edges']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

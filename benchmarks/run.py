@@ -2,11 +2,13 @@
 Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py contract).
 
 When the HGNN trajectory modules run (``bench_stage_breakdown``,
-``bench_na_fused`` and/or ``bench_sa_epilogue``), their rows are also folded
-into ``BENCH_hgnn.json`` at the repo root — the machine-readable perf
-baseline future PRs diff against (per-stage wall + characterization
-breakdown, fused-vs-baseline NA speedup + launch counts, and the fused
-NA→SA epilogue's saved-HBM-pass snapshot).
+``bench_na_fused``, ``bench_sa_epilogue``, ``bench_partition`` and/or
+``bench_layers``), their rows are also folded into ``BENCH_hgnn.json`` at
+the repo root — the machine-readable perf baseline future PRs diff against
+(per-stage wall + characterization breakdown, fused-vs-baseline and
+bucketed-vs-CSR NA speedups + launch counts, the fused NA→SA epilogue's
+saved-HBM-pass snapshot, the partitioned halo-traffic sweep, and the
+L-layer depth sweep with per-layer stage records + halo-bytes × L).
 
 ``--check`` turns the run into a regression gate: before the new snapshot is
 written, every fresh stage cost (FP/NA/SA and, for partitioned runs, the
@@ -37,6 +39,7 @@ MODULES = [
     "bench_na_fused",            # fused GAT-NA vs per-head baseline
     "bench_sa_epilogue",         # fused NA->SA epilogue HBM-pass snapshot
     "bench_partition",           # partitioned execution: cut vs halo vs NA
+    "bench_layers",              # L-layer depth sweep: stage mix + halo x L
     "bench_lm_roofline",         # 40-cell arch x shape roofline table
 ]
 
@@ -89,6 +92,32 @@ def parse_partition(rows) -> dict:
     return out
 
 
+def parse_layers(rows) -> dict:
+    """``layers/<model>/<ds>/L<depth>/...`` rows -> {case: record}.
+
+    Per case (``han/imdb/L2``): ``stages_us`` per-layer stage walls,
+    ``char`` per-layer FLOPs/HBM bytes (deterministic, gated), and ``halo``
+    the partitioned arm's traffic (halo-bytes × L, deterministic, gated)."""
+    out: dict = {}
+    for name, us, derived in rows or []:
+        m = re.fullmatch(r"layers/(\w+)/(\w+)/L(\d+)/(.+)", name)
+        if not m:
+            continue
+        case = f"{m.group(1)}/{m.group(2)}/L{m.group(3)}"
+        rec = out.setdefault(case, {})
+        tail = m.group(4)
+        d = dict(kv.split("=", 1) for kv in derived.split()) if derived else {}
+        if tail == "halo":
+            rec["halo"] = {k: float(v) for k, v in d.items()}
+        elif tail.startswith("char/"):
+            rec.setdefault("char", {})[tail[5:]] = {
+                "flops": float(d["flops"]),
+                "hbm_bytes": float(d["hbm_bytes"])}
+        else:
+            rec.setdefault("stages_us", {})[tail] = round(us, 1)
+    return out
+
+
 def check_regression(results: dict, threshold: float = 0.20) -> None:
     """Bench-regression gate: diff the fresh NA/SA stage costs against the
     committed ``BENCH_hgnn.json``; fail on >``threshold`` regression.
@@ -108,7 +137,8 @@ def check_regression(results: dict, threshold: float = 0.20) -> None:
     deterministic partitioner output, so byte/cut drift needs no floor."""
     sb = results.get("bench_stage_breakdown")
     pt = results.get("bench_partition")
-    if (not sb and not pt) or not BENCH_JSON.exists():
+    ly = results.get("bench_layers")
+    if (not sb and not pt and not ly) or not BENCH_JSON.exists():
         return
     try:
         committed = json.loads(BENCH_JSON.read_text())
@@ -185,6 +215,56 @@ def check_regression(results: dict, threshold: float = 0.20) -> None:
                     regressions.append(
                         f"partition/{case} {metric}: {pv:.3g} -> {nv:.3g} "
                         f"(+{100 * (nv / pv - 1):.0f}%)")
+    if ly:
+        # depth sweep: wall times stay ungated (tens-of-ms CPU noise); the
+        # gate covers per-layer stage PRESENCE, the deterministic per-layer
+        # characterization records, and the halo-bytes x L traffic (exact
+        # re-runs of the same partitioner + HLO walk)
+        old_layers = committed.get("layers", {})
+        fresh_layers = parse_layers(ly)
+        if not fresh_layers and old_layers:
+            regressions.append("bench_layers rows parsed to zero cases "
+                               "(row naming / gate regex drift?)")
+        for case, rec in fresh_layers.items():
+            prev = old_layers.get(case)
+            if not prev:
+                continue
+            for st in prev.get("stages_us", {}):
+                if st not in rec.get("stages_us", {}):
+                    regressions.append(f"layers/{case}/{st}: recorded stage "
+                                       "missing from the fresh run")
+            for st, pm in prev.get("char", {}).items():
+                nm = rec.get("char", {}).get(st)
+                if nm is None:
+                    regressions.append(f"layers/{case}/char/{st}: recorded "
+                                       "characterization missing from the "
+                                       "fresh run")
+                    continue
+                for metric in ("flops", "hbm_bytes"):
+                    if not pm[metric]:
+                        # zero baseline (e.g. RGCN's identity hidden FP has
+                        # zero FLOPs): any appearance of work is a change
+                        # worth flagging, and there is no percent to compute
+                        if nm[metric]:
+                            regressions.append(
+                                f"layers/{case}/{st} {metric}: 0 -> "
+                                f"{nm[metric]:.3g}")
+                        continue
+                    if nm[metric] > pm[metric] * (1 + threshold):
+                        regressions.append(
+                            f"layers/{case}/{st} {metric}: {pm[metric]:.3g} "
+                            f"-> {nm[metric]:.3g} "
+                            f"(+{100 * (nm[metric] / pm[metric] - 1):.0f}%)")
+            if prev.get("halo") and not rec.get("halo"):
+                regressions.append(f"layers/{case}/halo: recorded halo "
+                                   "record missing from the fresh run")
+            for metric in ("halo_bytes", "halo_bytes_total"):
+                pv = prev.get("halo", {}).get(metric)
+                nv = rec.get("halo", {}).get(metric)
+                if pv and nv is not None and nv > pv * (1 + threshold):
+                    regressions.append(
+                        f"layers/{case} {metric}: {pv:.3g} -> {nv:.3g} "
+                        f"(+{100 * (nv / pv - 1):.0f}%)")
     if regressions:
         raise SystemExit("bench regression gate (>"
                          f"{int(threshold * 100)}% vs {BENCH_JSON.name}): "
@@ -231,6 +311,11 @@ def write_bench_json(results: dict) -> None:
                 m = re.search(r"speedup_vs_csr=([\d.]+)x", derived)
                 fused["speedup_vs_baseline"] = float(m.group(1)) if m else None
                 fused["na_launches_fused"] = 1
+            elif name == "na_fused/bucketed_xla":
+                fused["bucketed_us"] = round(us, 1)
+                m = re.search(r"speedup_vs_csr=([\d.]+)x", derived)
+                fused["bucketed_speedup_vs_csr"] = (float(m.group(1))
+                                                    if m else None)
             elif name == "na_fused/kernel_interpret_parity":
                 m = re.search(r"max_abs_err=([\d.e+-]+)", derived)
                 fused["kernel_max_abs_err"] = float(m.group(1)) if m else None
@@ -256,7 +341,12 @@ def write_bench_json(results: dict) -> None:
         # merge per case so a BENCH_SMOKE run (one model, two Ks) never
         # shrinks the committed multi-case sweep
         data.setdefault("partition", {}).update(parse_partition(pt))
-    if sb or nf or se or pt:
+    ly = results.get("bench_layers")
+    if ly:
+        # merge per case so a BENCH_SMOKE run (one model, two depths) never
+        # shrinks the committed depth sweep
+        data.setdefault("layers", {}).update(parse_layers(ly))
+    if sb or nf or se or pt or ly:
         BENCH_JSON.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
         print(f"# wrote {BENCH_JSON.name}", flush=True)
 

@@ -140,6 +140,9 @@ def _na_fused(data: dict) -> list:
     if "per_head_us" in nf:
         out.append(f"| padded, per head | {_us(nf['per_head_us'])} | "
                    f"{nf.get('na_launches_per_head', '—')} |")
+    if "bucketed_us" in nf:
+        out.append(f"| degree-bucketed (XLA) | {_us(nf['bucketed_us'])} | "
+                   "one per bucket |")
     if "fused_us" in nf:
         out.append(f"| fused, all heads | {_us(nf['fused_us'])} | "
                    f"{nf.get('na_launches_fused', '—')} |")
@@ -147,6 +150,10 @@ def _na_fused(data: dict) -> list:
     if nf.get("speedup_vs_baseline") is not None:
         tail.append(f"**{nf['speedup_vs_baseline']:.2f}x** vs the CSR "
                     "baseline")
+    if nf.get("bucketed_speedup_vs_csr") is not None:
+        tail.append("degree-bucketed layout "
+                    f"**{nf['bucketed_speedup_vs_csr']:.2f}x** vs CSR "
+                    "(the ROADMAP's pinned bucket-vs-baseline comparison)")
     if nf.get("kernel_max_abs_err") is not None:
         tail.append(f"kernel-vs-oracle max abs err {nf['kernel_max_abs_err']:.2e}")
     if tail:
@@ -219,6 +226,66 @@ def _partition(data: dict) -> list:
     return out
 
 
+def _layers(data: dict) -> list:
+    ly = data.get("layers")
+    if not ly:
+        return []
+    out = [
+        "",
+        "## Depth scaling: L-layer stacks (`HGNNConfig.layers`)",
+        "",
+        "Stacked FP→NA→SA layers over the layer-invariant host-side index "
+        "tables (`benchmarks/bench_layers.py`; cf. the training "
+        "characterization, arXiv:2407.11790).  Per-layer stage walls with "
+        "each layer's NA share, and the partitioned arm's halo traffic — "
+        "the graph-invariant halo maps re-exchange updated features every "
+        "layer, so total traffic is halo-bytes × L.",
+        "",
+        "| model/dataset | depth | layer | FP | NA | SA | NA share |",
+        "| --- | --- | --- | --- | --- | --- | --- |",
+    ]
+
+    def sort_key(case):
+        base, _, dpart = case.rpartition("/L")
+        return (base, int(dpart) if dpart.isdigit() else 0)
+
+    halo_lines = []
+    for case in sorted(ly, key=sort_key):
+        base, _, depth = case.rpartition("/L")
+        rec = ly[case]
+        st = rec.get("stages_us", {})
+        per_layer: dict = {}
+        for name, us in st.items():
+            layer, _, stage = name.rpartition(".")
+            per_layer.setdefault(layer or "L1", {})[stage] = us
+        for layer in sorted(per_layer):
+            stages_us = per_layer[layer]
+            total = sum(stages_us.get(s, 0.0)
+                        for s in ("FP", "NA", "SA")) or 1.0
+            cells = [(_us(stages_us[s]) if s in stages_us else "—")
+                     for s in ("FP", "NA", "SA")]
+            share = 100.0 * stages_us.get("NA", 0.0) / total
+            out.append(f"| {base} | {depth} | {layer} | {cells[0]} | "
+                       f"{cells[1]} | {cells[2]} | {share:.1f}% |")
+        halo = rec.get("halo")
+        if halo:
+            halo_lines.append(
+                f"| {base} | {depth} | {int(halo.get('k', 0))} | "
+                f"{_bytes(halo.get('halo_bytes', 0.0))} | "
+                f"{_bytes(halo.get('halo_bytes_total', 0.0))} |")
+    if halo_lines:
+        out += [
+            "",
+            "Partitioned arm (K edge-cut partitions): one `gather_halo` "
+            "exchange per layer over the same halo maps.",
+            "",
+            "| model/dataset | depth | K | halo bytes / exchange | "
+            "halo bytes × L |",
+            "| --- | --- | --- | --- | --- |",
+        ] + halo_lines
+    return out
+
+
 def render(data: dict) -> str:
     lines = [HEADER]
     lines += _stage_breakdown(data)
@@ -226,14 +293,16 @@ def render(data: dict) -> str:
     lines += _na_fused(data)
     lines += _sa_epilogue(data)
     lines += _partition(data)
+    lines += _layers(data)
     lines += [
         "",
         "## Regenerating",
         "",
         "```bash",
-        "# refresh the snapshot (stage breakdown + NA/SA fusion + partition)",
+        "# refresh the snapshot (stage breakdown + NA/SA fusion + partition",
+        "# + depth sweep)",
         "PYTHONPATH=src:. python benchmarks/run.py bench_stage_breakdown \\",
-        "    bench_na_fused bench_sa_epilogue bench_partition",
+        "    bench_na_fused bench_sa_epilogue bench_partition bench_layers",
         "# re-render this page",
         "python scripts/gen_characterization.py",
         "```",

@@ -173,7 +173,19 @@ class HGNNConfig:
     # exchange between them. 0 keeps the single-table execution. Needs the
     # stacked (HAN) / padded (RGCN) / instances (MAGNN) NA layouts.
     partitions: int = 0
+    # Stacked FP->NA->SA layers (real deployments run 2-3; the training
+    # characterization, arXiv:2407.11790, measures the stage mix shifting
+    # with depth). 1 = the paper's single pass, bit-exact with the
+    # pre-multi-layer path. The graph-side index tables are layer-invariant
+    # (built once in prepare()); each extra layer adds its own FP/NA/SA
+    # params and, when partitioned, re-exchanges the updated halo features.
+    layers: int = 1
     seed: int = 0
+
+    def __post_init__(self):
+        if self.layers < 1:
+            raise ValueError(
+                f"HGNNConfig.layers must be >= 1 (got {self.layers})")
 
     def replace(self, **kw) -> "HGNNConfig":
         return dataclasses.replace(self, **kw)

@@ -366,7 +366,7 @@ def analyze_hlo_text(text: str) -> Dict:
 # ---------------------------------------------------------------------------
 
 
-def partition_traffic(part: Dict, h_own: Dict) -> Dict:
+def partition_traffic(part: Dict, h_own: Dict, layers: int = 1) -> Dict:
     """Halo-exchange / edge-cut record for the partitioned execution mode.
 
     ``part`` is the device batch's partition table (``repro.dist.partition``:
@@ -376,6 +376,12 @@ def partition_traffic(part: Dict, h_own: Dict) -> Dict:
     paper-facing view of the new communication stage — the bytes that cross
     partitions because an edge was cut — independent of how the exchange is
     lowered (shard_map all-gather vs GSPMD resharding).
+
+    ``layers``: an L-layer stack re-runs the exchange once per layer on the
+    *updated* features (the halo maps are graph-invariant and every layer's
+    tables are hidden-width), so the total exchanged traffic is the
+    per-exchange volume × L — reported as ``halo_bytes_total`` /
+    ``halo_rows_total`` next to the per-exchange figures.
     """
     import numpy as np
 
@@ -400,6 +406,9 @@ def partition_traffic(part: Dict, h_own: Dict) -> Dict:
         "cut_edges": cut,
         "edges_total": total,
         "cut_ratio": cut / max(total, 1),
+        "layers": int(layers),
+        "halo_rows_total": halo_rows * layers,
+        "halo_bytes_total": halo_bytes * layers,
     }
 
 

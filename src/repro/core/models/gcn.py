@@ -20,7 +20,8 @@ from repro.core import metapath as mp
 from repro.core import stages
 from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
-from repro.core.plan import FPSpec, HeadSpec, NASpec, SASpec, StagePlan
+from repro.core.plan import (FPSpec, HeadSpec, LayerPlan, NASpec, SASpec,
+                             StagePlan)
 from repro.data.synthetic import DATASET_TARGET
 
 
@@ -33,12 +34,18 @@ class GCN(PlannedModel):
         if self.cfg.partitions >= 1:
             raise ValueError("gcn runs the homogeneous CSR baseline; it has "
                              "no partitioned execution layout")
+        # one LayerPlan = one agg(relu(agg(h @ w))) block (the paper's
+        # 2-conv GCN); extra layers stack that block with fresh [D, D]
+        # combination weights before the classifier head
         return StagePlan(
             model="gcn",
             target=self.target,
-            fp=FPSpec(kind="dense"),
-            na=NASpec(kind="gcn", layout="csr", activation="relu"),
-            sa=SASpec(kind="none"),
+            layers=tuple(
+                LayerPlan(fp=FPSpec(kind="dense", sharded=False),
+                          na=NASpec(kind="gcn", layout="csr",
+                                    activation="relu"),
+                          sa=SASpec(kind="none"), handoff="target")
+                for l in range(self.cfg.layers)),
             head=HeadSpec(kind="linear", param="w2"),
         )
 

@@ -27,8 +27,8 @@ from repro.core import stages
 from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
 from repro.core.plan import (BUCKETED_BATCH_SPECS, PARTITION_BATCH_SPECS,
-                             STACKED_BATCH_SPECS, FPSpec, HeadSpec, NASpec,
-                             PartitionSpec, SASpec, StagePlan)
+                             STACKED_BATCH_SPECS, FPSpec, HeadSpec, LayerPlan,
+                             NASpec, PartitionSpec, SASpec, StagePlan)
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
@@ -54,15 +54,24 @@ class HAN(PlannedModel):
                     "(fused=True, no degree buckets); got "
                     f"layout={layout!r}")
             part = PartitionSpec(k=cfg.partitions)
+        na = NASpec(kind="gat", layout=layout, activation="elu",
+                    use_pallas=cfg.use_pallas)
+        sa = SASpec(kind="attention", stacked=cfg.fused,
+                    fuse_epilogue=(cfg.fuse_na_sa and layout == "stacked"
+                                   and part is None))
+        # layer 0 projects the raw per-type features; the metapath graphs
+        # are target->target, so every hidden layer re-projects only the
+        # previous SA output (a dense [D, D] matmul, reshaped to heads)
         return StagePlan(
             model="han",
             target=self.target,
-            fp=FPSpec(kind="per_type", sharded=True, heads=True),
-            na=NASpec(kind="gat", layout=layout, activation="elu",
-                      use_pallas=cfg.use_pallas),
-            sa=SASpec(kind="attention", stacked=cfg.fused,
-                      fuse_epilogue=(cfg.fuse_na_sa and layout == "stacked"
-                                     and part is None)),
+            layers=tuple(
+                LayerPlan(
+                    fp=(FPSpec(kind="per_type", sharded=True, heads=True)
+                        if l == 0 else
+                        FPSpec(kind="dense", sharded=True, heads=True)),
+                    na=na, sa=sa, handoff="target")
+                for l in range(cfg.layers)),
             head=HeadSpec(kind="linear"),
             metapaths=tuple(tuple(p) for p in self.metapaths),
             batch_specs=(PARTITION_BATCH_SPECS if part is not None

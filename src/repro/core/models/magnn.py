@@ -25,8 +25,8 @@ from repro.core import metapath as mp
 from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
 from repro.core.plan import (INSTANCE_BATCH_SPECS, PARTITION_BATCH_SPECS,
-                             FPSpec, HeadSpec, NASpec, PartitionSpec, SASpec,
-                             StagePlan)
+                             FPSpec, HeadSpec, LayerPlan, NASpec,
+                             PartitionSpec, SASpec, StagePlan)
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
@@ -40,13 +40,22 @@ class MAGNN(PlannedModel):
         cfg = self.cfg
         part = (PartitionSpec(k=cfg.partitions) if cfg.partitions >= 1
                 else None)
+        na = NASpec(kind="instance", layout="instances", activation="elu",
+                    use_pallas=cfg.use_pallas)
+        sa = SASpec(kind="attention", stacked=False)
+        # instance gathers touch every metapath position's type, so hidden
+        # layers carry the non-target positions forward from this layer's FP
+        # (handoff="target+carry") and re-project all of them ([D, D] per
+        # type) before the next round of gathers
+        carry = tuple(sorted({ty for p in self.metapaths for ty in p}
+                             - {self.target}))
         return StagePlan(
             model="magnn",
             target=self.target,
-            fp=FPSpec(kind="per_type", sharded=False),
-            na=NASpec(kind="instance", layout="instances", activation="elu",
-                      use_pallas=cfg.use_pallas),
-            sa=SASpec(kind="attention", stacked=False),
+            layers=tuple(
+                LayerPlan(fp=FPSpec(kind="per_type", sharded=False),
+                          na=na, sa=sa, handoff="target+carry", carry=carry)
+                for l in range(cfg.layers)),
             head=HeadSpec(kind="linear"),
             metapaths=tuple(tuple(p) for p in self.metapaths),
             batch_specs=(PARTITION_BATCH_SPECS if part is not None

@@ -24,8 +24,8 @@ from repro.core import stages
 from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
 from repro.core.plan import (PARTITION_BATCH_SPECS, RELATION_BATCH_SPECS,
-                             FPSpec, HeadSpec, NASpec, PartitionSpec, SASpec,
-                             StagePlan)
+                             FPSpec, HeadSpec, LayerPlan, NASpec,
+                             PartitionSpec, SASpec, StagePlan)
 from repro.data.synthetic import DATASET_TARGET
 
 
@@ -50,12 +50,19 @@ class RGCN(PlannedModel):
                     "partitioned RGCN execution needs the padded per-relation "
                     f"layout (fused=True, no degree buckets); got {layout!r}")
             part = PartitionSpec(k=cfg.partitions)
+        na = NASpec(kind="mean", layout=layout, use_pallas=cfg.use_pallas)
+        # rel_sum SA updates EVERY node type (handoff="all"); hidden layers
+        # need no FP — the per-layer w_rel / w_self matmuls inside NA/SA are
+        # the layer's linear transform (h' = relu(W_0 h + sum mean(h_s) W_r))
         return StagePlan(
             model="rgcn",
             target=self.target,
-            fp=FPSpec(kind="per_type", sharded=True),
-            na=NASpec(kind="mean", layout=layout, use_pallas=cfg.use_pallas),
-            sa=SASpec(kind="rel_sum"),
+            layers=tuple(
+                LayerPlan(
+                    fp=(FPSpec(kind="per_type", sharded=True) if l == 0
+                        else FPSpec(kind="identity")),
+                    na=na, sa=SASpec(kind="rel_sum"), handoff="all")
+                for l in range(cfg.layers)),
             head=HeadSpec(kind="select_linear", target=self.target),
             batch_specs=(PARTITION_BATCH_SPECS if part is not None
                          else RELATION_BATCH_SPECS),

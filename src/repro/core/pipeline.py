@@ -7,6 +7,15 @@ layout, kernel dispatch, sharding constraints and interpret/pallas mode from
 the plan, and the models shrink to host-side ``prepare()`` plus a plan
 builder (:class:`PlannedModel`).
 
+A plan is an **L-layer stack** (:class:`repro.core.plan.LayerPlan`): the
+executor loops FP→NA→SA per layer with the per-type intermediate feature
+tables as the carried state, reusing the layer-invariant host-side layouts
+(padded/stacked/bucketed index maps, degree buckets, instance LUTs, halo
+maps) built once in ``prepare()``.  Layer 0's parameters live at the pytree
+root — ``cfg.layers=1`` is bit-exact with the pre-multi-layer path — and
+hidden layers ride ``params["layers"][l-1]`` with the same leaf names, so
+the declarative sharding rule tables cover them for free.
+
 The executor also owns the paper's two structural optimizations:
 
 * **Graph-partitioned execution** (``plan.partition``): the vertex/feature
@@ -15,7 +24,10 @@ The executor also owns the paper's two structural optimizations:
   between them is an explicit ``gather_halo`` stage (shard_map over the
   BATCH axes when the mesh divides K).  SA runs unchanged on the
   partition-local stacks — its score pass reduces per-partition partials,
-  so the only other communication is a [K, P]-sized reduce.
+  so the only other communication is a [K, P]-sized reduce.  The halo
+  *maps* are graph-invariant, so an L-layer stack re-runs ``gather_halo``
+  per layer on the *updated* features (total exchanged traffic =
+  halo-bytes × L; ``characterize.partition_traffic`` reports it).
 
 * **Fused NA→SA epilogue** (``plan.sa.fuse_epilogue``): on the stacked
   layout the semantic-score pass-1 partial (``mean_n q·tanh(z W + b)``)
@@ -61,6 +73,19 @@ class StageGraphExecutor:
     # params
     # ------------------------------------------------------------------
     def init(self, rng: jax.Array, batch: Dict) -> Dict:
+        params = self._init_layer0(rng, batch)
+        if self.plan.n_layers > 1:
+            # hidden-layer params mirror the root leaf names under
+            # params["layers"][l-1] (the sharding rule tables match on leaf
+            # name + rank, so they cover the stack for free); fold_in keeps
+            # the layer-0 RNG stream untouched -> layers=1 stays bit-exact
+            params["layers"] = [
+                self._init_hidden_layer(jax.random.fold_in(rng, l), batch)
+                for l in range(1, self.plan.n_layers)
+            ]
+        return params
+
+    def _init_layer0(self, rng: jax.Array, batch: Dict) -> Dict:
         cfg, plan = self.cfg, self.plan
         d = cfg.hidden
         if plan.na.kind == "gcn":
@@ -77,7 +102,19 @@ class StageGraphExecutor:
             "cls": jax.random.normal(k_cls, (d, cfg.n_classes), jnp.float32)
             / np.sqrt(d),
         }
+        params.update(self._init_na_sa(k_na, k_sem, batch))
+        return params
+
+    def _init_na_sa(self, k_na: jax.Array, k_sem: jax.Array,
+                    batch: Dict) -> Dict:
+        """The NA/SA parameter block shared by layer 0 and every hidden
+        layer: gat stacks / instance attention + semantic attention, or
+        per-relation ``w_rel`` + per-type ``w_self``.  RNG consumption is
+        identical to the pre-multi-layer init, so layer 0 stays bit-exact."""
+        cfg, plan = self.cfg, self.plan
+        d = cfg.hidden
         head_dim = d // cfg.n_heads
+        p: Dict = {}
         if plan.na.kind == "gat":
             keys = jax.random.split(k_na, len(plan.metapaths))
             gat = [stages.init_gat(k, cfg.n_heads, head_dim) for k in keys]
@@ -85,30 +122,60 @@ class StageGraphExecutor:
                 # one stacked param set -> ONE kernel launch for the stack
                 # (bucketed keeps the per-metapath list: no uniform K)
                 gat = jax.tree.map(lambda *xs: jnp.stack(xs), *gat)
-            params["gat"] = gat
-            params["sem"] = semantics.init_semantic_attention(
+            p["gat"] = gat
+            p["sem"] = semantics.init_semantic_attention(
                 k_sem, d, cfg.attn_hidden)
         elif plan.na.kind == "instance":
             keys = jax.random.split(k_na, len(plan.metapaths))
-            params["att"] = [
+            p["att"] = [
                 stages.init_instance_attention(k, cfg.n_heads, head_dim)
                 for k in keys
             ]
-            params["sem"] = semantics.init_semantic_attention(
+            p["sem"] = semantics.init_semantic_attention(
                 k_sem, d, cfg.attn_hidden)
         elif plan.na.kind == "mean":
             rel_keys = sorted(batch["rels"])
             rel_ks = jax.random.split(k_na, max(len(rel_keys), 1))
             self_ks = jax.random.split(k_sem, len(batch["counts"]))
-            params["w_rel"] = {
+            p["w_rel"] = {
                 key: jax.random.normal(k, (d, d), jnp.float32) / np.sqrt(d)
                 for key, k in zip(rel_keys, rel_ks)
             }
-            params["w_self"] = {
+            p["w_self"] = {
                 t: jax.random.normal(k, (d, d), jnp.float32) / np.sqrt(d)
                 for t, k in zip(sorted(batch["counts"]), self_ks)
             }
-        return params
+        return p
+
+    def _init_hidden_layer(self, rng: jax.Array, batch: Dict) -> Dict:
+        """Params for one layer >= 1: the hidden FP (square [D, D]
+        re-projections of the carried tables, or nothing for ``identity``)
+        plus a fresh copy of the layer's NA/SA attention/relation weights."""
+        cfg, plan = self.cfg, self.plan
+        d = cfg.hidden
+        if plan.na.kind == "gcn":
+            return {"fp": jax.random.normal(rng, (d, d), jnp.float32)
+                    / np.sqrt(d)}
+        k_fp, k_na, k_sem = jax.random.split(rng, 3)
+        p: Dict = {}
+        if plan.na.kind == "gat":
+            p["fp"] = jax.random.normal(k_fp, (d, d), jnp.float32) / np.sqrt(d)
+        elif plan.na.kind == "instance":
+            # carry is layer-uniform (StagePlan.__post_init__)
+            types = tuple(sorted(set(plan.layers[0].carry) | {plan.target}))
+            fp_ks = jax.random.split(k_fp, len(types))
+            p["fp"] = {
+                t: jax.random.normal(k, (d, d), jnp.float32) / np.sqrt(d)
+                for t, k in zip(types, fp_ks)
+            }
+        p.update(self._init_na_sa(k_na, k_sem, batch))
+        return p
+
+    def _layer_params(self, params: Dict, l: int) -> Dict:
+        """Layer ``l``'s parameter dict: layer 0 lives at the pytree root
+        (bit-exact with the single-layer layout), hidden layers under
+        ``params["layers"][l-1]`` with the same leaf names."""
+        return params if l == 0 else params["layers"][l - 1]
 
     # ------------------------------------------------------------------
     # Stage 2: Feature Projection
@@ -138,6 +205,53 @@ class StageGraphExecutor:
                 w = stages.shard(w, *stages.HGNN_STAGE_SPECS["fp_weight"])
             out[t] = stages.shard(f @ w, BATCH, None, MODEL)
         return out
+
+    def _fp_hidden(self, lp, p_l: Dict, state):
+        """FP for layers >= 1: project the carried per-type feature tables
+        (``[N_t, D]`` single-table, ``[K, n_t, D]`` partitioned — the matmul
+        broadcasts over the partition dim).  ``identity`` passes the state
+        through (RGCN: the relation weights are the layer's transform)."""
+        plan = self.plan
+        if lp.fp.kind == "identity":
+            return state
+        if lp.fp.kind == "per_type":
+            project = (stages.feature_projection_sharded if lp.fp.sharded
+                       else stages.feature_projection)
+            return project(p_l["fp"], state)
+        # dense: a single [D, D] re-projection of the carried target table
+        w = p_l["fp"]
+        if lp.fp.sharded:
+            w = stages.shard(w, *stages.HGNN_STAGE_SPECS["fp_weight"])
+        x = state[plan.target]
+        if plan.partition is not None:
+            # keep the dict shape gather_halo expects; heads reshaping
+            # happens inside the partitioned NA (as in layer 0)
+            return {plan.target: stages.shard(x @ w, BATCH, None, MODEL)}
+        h = x @ w
+        if lp.fp.sharded:
+            h = stages.shard(h, *stages.HGNN_STAGE_SPECS["fp_out"])
+        if lp.fp.heads:
+            return h.reshape(h.shape[0], self.cfg.n_heads, -1)  # [N, H, Dh]
+        return h
+
+    def _handoff(self, lp, batch: Dict, h, out):
+        """Package one layer's outputs as the next layer's carried state —
+        the device-side realization of ``LayerPlan.handoff``.  ``h`` is this
+        layer's FP output (post-``gather_halo`` in the partitioned flow),
+        ``out`` its SA output."""
+        plan = self.plan
+        if lp.handoff == "all":
+            return out  # rel_sum SA already returned every type's table
+        state = {plan.target: out}
+        if lp.handoff == "target+carry":
+            if plan.partition is not None:
+                part = batch["part"]
+                for ty in lp.carry:  # owned rows only; halos re-exchange
+                    state[ty] = h[ty][:, : part["feats"][ty].shape[1]]
+            else:
+                for ty in lp.carry:
+                    state[ty] = h[ty]
+        return state
 
     # ------------------------------------------------------------------
     # partitioned flow: the halo feature exchange (the new explicit stage)
@@ -328,12 +442,21 @@ class StageGraphExecutor:
             z = z.reshape(z.shape[0], z.shape[1], z.shape[2], -1)
             return stages.shard(z, BATCH, None, None, None)  # [K, P, n, D]
         if plan.na.kind == "mean":
-            out: Dict = {"__h__": h_loc[t][:, : part["feats"][t].shape[1]]}
+            if plan.n_layers > 1:
+                # multi-layer partitioning relabels EVERY relation (each
+                # destination type aggregates on its own owners); carry the
+                # per-type owned rows for the rel_sum self-loop
+                out: Dict = {"__h__": {
+                    ty: h_loc[ty][:, : part["feats"][ty].shape[1]]
+                    for ty in part["feats"]
+                }}
+            else:
+                out = {"__h__": h_loc[t][:, : part["feats"][t].shape[1]]}
             for key in sorted(part["rels"]):
                 s = key[0]
                 nbr, mask = part["rels"][key]
                 agg = jax.vmap(stages.mean_aggregate_padded)(
-                    h_loc[s], nbr, mask)  # [K, n, D]
+                    h_loc[s], nbr, mask)  # [K, n_d, D]
                 out["|".join(key)] = agg @ params["w_rel"][key]
             return out
         if plan.na.kind == "instance":
@@ -360,6 +483,22 @@ class StageGraphExecutor:
     # ------------------------------------------------------------------
     # Stage 4: Semantic Aggregation
     # ------------------------------------------------------------------
+    def _rel_sum(self, params: Dict, h_own: Dict, z: Dict) -> Dict:
+        """The rel_sum SA body shared by the single-table and partitioned
+        flows: per type, sum the relation aggregates (Reduce) into the
+        ``w_self`` self-loop.  ``h_own`` maps type -> its own feature rows
+        (``[N_t, D]`` or ``[K, n_t, D]``); ``z`` the NA output dict keyed
+        by ``"s|r|d"`` relation strings."""
+        h_new: Dict = {}
+        for t in sorted(h_own):
+            acc = None
+            for key, v in z.items():
+                if key != "__h__" and key.split("|")[2] == t:
+                    acc = v if acc is None else acc + v  # Reduce (sum)
+            h_self = h_own[t] @ params["w_self"][t]
+            h_new[t] = jax.nn.relu(h_self if acc is None else h_self + acc)
+        return h_new
+
     def sa(self, params: Dict, batch: Dict, z):
         plan = self.plan
         if plan.partition is not None:
@@ -367,16 +506,7 @@ class StageGraphExecutor:
         if plan.sa.kind == "none":
             return z
         if plan.sa.kind == "rel_sum":
-            h = z["__h__"]
-            h_new: Dict[str, jax.Array] = {}
-            for t in batch["counts"]:
-                acc = None
-                for key, v in z.items():
-                    if key != "__h__" and key.split("|")[2] == t:
-                        acc = v if acc is None else acc + v  # Reduce (sum)
-                h_self = h[t] @ params["w_self"][t]
-                h_new[t] = jax.nn.relu(h_self if acc is None else h_self + acc)
-            return h_new
+            return self._rel_sum(params, z["__h__"], z)
         # attention
         if isinstance(z, tuple):  # fused NA→SA epilogue: (z, pass-1 scores)
             z_stack, wp = z
@@ -397,13 +527,13 @@ class StageGraphExecutor:
         part = batch["part"]
         mask = part["own_mask"][plan.target]  # [K, n]
         if plan.sa.kind == "rel_sum":
-            h = z["__h__"]  # [K, n, D] owned target rows
-            acc = None
-            for key, v in z.items():
-                if key != "__h__" and key.split("|")[2] == plan.target:
-                    acc = v if acc is None else acc + v
-            h_self = h @ params["w_self"][plan.target]
-            return jax.nn.relu(h_self if acc is None else h_self + acc)
+            if plan.n_layers > 1:
+                # every type updates (as in the unpartitioned rel_sum);
+                # pad rows stay zero: zero feats -> zero aggregates -> relu(0)
+                return self._rel_sum(params, z["__h__"], z)
+            # single layer: __h__ is the owned target rows [K, n, D] only
+            return self._rel_sum(params, {plan.target: z["__h__"]},
+                                 z)[plan.target]
         # attention (HAN stacked [K, P, n, D]; MAGNN list of [K, n, D])
         if isinstance(z, list):
             z = jnp.stack(z, axis=1)  # [K, P, n, D]
@@ -417,9 +547,12 @@ class StageGraphExecutor:
         plan = self.plan
         w = params[plan.head.param]
         if plan.partition is not None:
-            # SA already reduced to the owned target rows [K, n, D]; classify
-            # locally, then invert the ownership permutation back to global
-            # node order (`inv` maps global row -> flat own-order slot).
+            # SA already reduced to the owned target rows [K, n, D] (the
+            # multi-layer rel_sum returns every type — select the target);
+            # classify locally, then invert the ownership permutation back
+            # to global node order (`inv` maps global row -> own-order slot).
+            if isinstance(z, dict):
+                z = z[plan.target]
             out = z @ w  # [K, n, C]
             flat = out.reshape(-1, out.shape[-1])
             return flat[batch["part"]["inv"]]
@@ -428,11 +561,23 @@ class StageGraphExecutor:
         return z @ w
 
     def forward(self, params: Dict, batch: Dict) -> jax.Array:
-        h = self.fp(params, batch)
-        if self.plan.partition is not None:
-            h = self.gather_halo(batch, h)
-        z = self.na(params, batch, h)
-        return self.head(params, self.sa(params, batch, z), batch)
+        """The L-layer loop: per-type feature tables are the carried state;
+        layer 0 reads the prepared batch, hidden layers the previous
+        handoff.  The partitioned flow re-exchanges the *updated* halo
+        features every layer over the graph-invariant halo maps."""
+        plan = self.plan
+        state = out = None
+        for l, lp in enumerate(plan.layers):
+            p_l = self._layer_params(params, l)
+            h = (self.fp(params, batch) if l == 0
+                 else self._fp_hidden(lp, p_l, state))
+            if plan.partition is not None:
+                h = self.gather_halo(batch, h)
+            z = self.na(p_l, batch, h)
+            out = self.sa(p_l, batch, z)
+            if l + 1 < plan.n_layers:
+                state = self._handoff(lp, batch, h, out)
+        return self.head(params, out, batch)
 
     # ------------------------------------------------------------------
     # per-stage characterization hooks
@@ -440,21 +585,46 @@ class StageGraphExecutor:
     def stage_fns(self, params: Dict, batch: Dict) -> Dict[str, Tuple]:
         """Jitted per-stage callables chained on concrete intermediates —
         the separate jit per stage mirrors DGL's separate kernel launches
-        and exposes the NA→SA barrier (paper Fig. 5c)."""
-        fp = jax.jit(lambda p: self.fp(p, batch))
-        h = fp(params)
-        fns: Dict[str, Tuple] = {"FP": (fp, (params,))}
-        if self.plan.partition is not None:
-            gh = jax.jit(lambda hh: self.gather_halo(batch, hh))
-            fns["gather_halo"] = (gh, (h,))
-            h = gh(h)
-        na = jax.jit(lambda p, hh: self.na(p, batch, hh))
-        z = na(params, h)
-        sa = jax.jit(lambda p, zz: self.sa(p, batch, zz))
-        out = sa(params, z)
+        and exposes the NA→SA barrier (paper Fig. 5c).
+
+        Single-layer plans keep the historical unprefixed stage names
+        (``FP``/``gather_halo``/``NA``/``SA``/``head``); an L-layer stack
+        prefixes every per-layer stage with ``L{i}.`` (1-based), so the
+        characterization handbook can show depth scaling per layer."""
+        plan = self.plan
+        n_l = plan.n_layers
+        fns: Dict[str, Tuple] = {}
+        state = out = None
+        # one jitted exchange shared by every layer (same computation on
+        # same-shaped tables — a per-layer lambda would recompile it L times)
+        gh = (jax.jit(lambda hh: self.gather_halo(batch, hh))
+              if plan.partition is not None else None)
+        for l, lp in enumerate(plan.layers):
+            pre = f"L{l + 1}." if n_l > 1 else ""
+            if l == 0:
+                fp = jax.jit(lambda p: self.fp(p, batch))
+                fp_args: Tuple = (params,)
+            else:
+                fp = jax.jit(lambda p, s, lp=lp, l=l: self._fp_hidden(
+                    lp, self._layer_params(p, l), s))
+                fp_args = (params, state)
+            h = fp(*fp_args)
+            fns[pre + "FP"] = (fp, fp_args)
+            if gh is not None:
+                fns[pre + "gather_halo"] = (gh, (h,))
+                h = gh(h)
+            na = jax.jit(lambda p, hh, l=l: self.na(
+                self._layer_params(p, l), batch, hh))
+            z = na(params, h)
+            fns[pre + "NA"] = (na, (params, h))
+            sa = jax.jit(lambda p, zz, l=l: self.sa(
+                self._layer_params(p, l), batch, zz))
+            out = sa(params, z)
+            fns[pre + "SA"] = (sa, (params, z))
+            if l + 1 < n_l:
+                state = self._handoff(lp, batch, h, out)
         head = jax.jit(lambda p, oo: self.head(p, oo, batch))
-        fns.update({"NA": (na, (params, h)), "SA": (sa, (params, z)),
-                    "head": (head, (params, out))})
+        fns["head"] = (head, (params, out))
         return fns
 
     def stage_records(self, params: Dict, batch: Dict,
@@ -483,14 +653,20 @@ class StageGraphExecutor:
             "hbm_bytes": sum(r["hbm_bytes"] for r in recs.values()),
         }
         out = {"stages": recs, "total": total}
-        if "gather_halo" in fns:
+        gh_names = [n for n in fns if n.endswith("gather_halo")]
+        if gh_names:
             # the communication stage's paper-facing metrics: exchanged halo
             # rows/bytes and the partitioner's cut, from the batch metadata
-            # plus the actual per-type feature shapes entering the exchange
-            traffic = partition_traffic(batch["part"], fns["gather_halo"][1][0])
-            recs["gather_halo"]["halo_bytes"] = traffic["halo_bytes"]
-            recs["gather_halo"]["cut_edges"] = traffic["cut_edges"]
-            out["partition"] = traffic
+            # plus the actual per-type feature shapes entering the exchange.
+            # Every layer re-exchanges the updated features over the same
+            # graph-invariant halo maps, so each per-layer stage gets its
+            # own record and the summary reports halo-bytes × L.
+            for name in gh_names:
+                tr = partition_traffic(batch["part"], fns[name][1][0])
+                recs[name]["halo_bytes"] = tr["halo_bytes"]
+                recs[name]["cut_edges"] = tr["cut_edges"]
+            out["partition"] = partition_traffic(
+                batch["part"], fns[gh_names[0]][1][0], layers=len(gh_names))
         return out
 
 

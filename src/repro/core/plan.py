@@ -8,6 +8,16 @@ bucketed vs sharded vs pallas-vs-ref) inside its ``fp``/``na``/``sa``
 methods.  A :class:`StagePlan` lifts all of those choices into a frozen
 dataclass; one executor (:mod:`repro.core.pipeline`) interprets it.
 
+Real HGNN deployments stack 2–3 of those FP→NA→SA rounds (the follow-up
+training characterization, arXiv:2407.11790, measures how the stage mix
+shifts with depth), so a :class:`StagePlan` is an *L-layer container*: a
+tuple of :class:`LayerPlan`\\ s, each carrying its own FP/NA/SA specs plus
+the **inter-layer handoff** — which per-type feature tables layer *l* must
+materialize for layer *l+1*'s gathers.  The graph-side index tables
+(padded/stacked/bucketed neighbor maps, degree buckets, instance LUTs,
+partition halo maps) are layer-invariant and built once in ``prepare()``;
+only features flow between layers.
+
 Plan fields double as the sharding contract: ``batch_specs`` /
 ``param_specs`` are declarative (leaf-name, ndim) → logical-spec tables that
 ``launch/serve.py`` resolves into :class:`NamedSharding`s — no model-specific
@@ -47,9 +57,19 @@ ShardRule = Tuple[str, int, Tuple]
 
 @dataclass(frozen=True)
 class FPSpec:
-    """Stage 2 — Feature Projection (DM-Type dense matmul)."""
+    """Stage 2 — Feature Projection (DM-Type dense matmul).
 
-    kind: str = "per_type"  # per_type (dict of projections) | dense (single W)
+    ``kind`` values:
+      per_type  dict of per-type projections (layer 0: raw feats → hidden;
+                hidden layers: square re-projections of the carried tables)
+      dense     single W on the target table (GCN's combination matmul;
+                HAN hidden layers re-projecting the previous SA output)
+      identity  no projection — hidden RGCN layers, where the per-relation
+                ``w_rel`` / ``w_self`` matmuls inside NA/SA *are* the layer's
+                linear transform
+    """
+
+    kind: str = "per_type"  # per_type | dense | identity
     sharded: bool = True  # stage-aware shard constraints (no-op off-mesh)
     heads: bool = False  # reshape the target type to [N, H, Dh]
 
@@ -106,25 +126,96 @@ class PartitionSpec:
 
 
 @dataclass(frozen=True)
+class LayerPlan:
+    """One FP→NA→SA round of an L-layer stack.
+
+    ``handoff`` names the inter-layer contract — which per-type feature
+    tables this layer materializes for the next layer's gathers:
+
+    ============== =======================================================
+    handoff        carried state after this layer
+    ============== =======================================================
+    target         ``{target: z}`` — the metapath graphs are target→target
+                   (HAN's stacked subgraphs, GCN's homogeneous graph), so
+                   only the target table is ever gathered again
+    all            the SA stage already returns every node type's updated
+                   table (RGCN's rel_sum updates the whole graph)
+    target+carry   the target row is updated from SA; the ``carry`` types
+                   (MAGNN's non-target metapath positions) pass through
+                   from this layer's FP output and are re-projected by the
+                   next layer's FP
+    ============== =======================================================
+    """
+
+    fp: FPSpec
+    na: NASpec
+    sa: SASpec
+    handoff: str = "target"  # target | all | target+carry
+    carry: Tuple[str, ...] = ()  # non-target types forwarded (target+carry)
+
+
+@dataclass(frozen=True)
 class StagePlan:
     """One model's whole execution, declared as data.
 
-    ``metapaths`` carries the static per-metapath node-type paths (HAN's
-    subgraph count, MAGNN's per-position gather types) so the device batch
-    holds arrays only.
+    ``layers`` is the L-layer stack (one :class:`LayerPlan` per FP→NA→SA
+    round); the single-layer accessors ``plan.fp`` / ``plan.na`` /
+    ``plan.sa`` read layer 0, which is exact for every layer-invariant
+    field — NA kind/layout and the SA kind must be uniform across the
+    stack (the host-side index tables are built once), and only FP varies
+    per layer.  ``metapaths`` carries the static per-metapath node-type
+    paths (HAN's subgraph count, MAGNN's per-position gather types) so the
+    device batch holds arrays only.
     """
 
     model: str
     target: str  # target node type (classification rows)
-    fp: FPSpec
-    na: NASpec
-    sa: SASpec
+    layers: Tuple[LayerPlan, ...]
     head: HeadSpec
     metapaths: Tuple[Tuple[str, ...], ...] = ()
     batch_specs: Tuple[ShardRule, ...] = ()
     param_specs: Tuple[ShardRule, ...] = (("fp", 2, (None, MODEL)),)
     # Graph-partitioned execution mode (None = single-table execution).
     partition: Optional[PartitionSpec] = None
+
+    def __post_init__(self):
+        if not self.layers:
+            raise ValueError("a StagePlan needs at least one LayerPlan")
+        lp0 = self.layers[0]
+        for i, lp in enumerate(self.layers[1:], start=1):
+            # full-spec equality, not just kind/layout: the executor
+            # dispatches every layer on layer 0's NASpec/SASpec (activation,
+            # use_pallas, fuse_epilogue, ...) and inits hidden FP dicts from
+            # layer 0's carry, so a differing hidden spec would be silently
+            # ignored rather than honoured
+            if (lp.na != lp0.na or lp.sa != lp0.sa
+                    or (lp.handoff, lp.carry) != (lp0.handoff, lp0.carry)):
+                raise ValueError(
+                    "NA/SA specs and the handoff/carry contract must be "
+                    "layer-uniform (the host-side index tables are built "
+                    "once and the executor dispatches every layer on layer "
+                    f"0's specs); layer {i} declares "
+                    f"{(lp.na, lp.sa, lp.handoff, lp.carry)} vs layer 0's "
+                    f"{(lp0.na, lp0.sa, lp0.handoff, lp0.carry)}")
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    # Layer-0 accessors: every pre-multi-layer read site (`plan.na.layout`,
+    # `plan.sa.fuse_epilogue`, ...) keeps working, and stays correct for the
+    # layer-invariant fields enforced by __post_init__.
+    @property
+    def fp(self) -> FPSpec:
+        return self.layers[0].fp
+
+    @property
+    def na(self) -> NASpec:
+        return self.layers[0].na
+
+    @property
+    def sa(self) -> SASpec:
+        return self.layers[0].sa
 
     @property
     def shards_on_mesh(self) -> bool:

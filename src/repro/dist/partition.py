@@ -248,6 +248,11 @@ def partition_batch(plan, batch: Dict) -> Dict:
     if plan.na.layout == "stacked":
         return _partition_stacked(plan, batch, spec.k)
     if plan.na.layout == "padded" and plan.na.kind == "mean":
+        # a multi-layer rel_sum stack updates EVERY node type per layer, so
+        # every relation (not just those into the target) must be
+        # partitioned, each on its destination type's owners
+        if plan.n_layers > 1:
+            return _partition_relational_ml(plan, batch, spec.k)
         return _partition_relational(plan, batch, spec.k)
     if plan.na.layout == "instances":
         return _partition_instances(plan, batch, spec.k)
@@ -352,6 +357,25 @@ def _partition_stacked(plan, batch: Dict, k: int) -> Dict:
     }
 
 
+def _target_edge_cut(rels_t: Dict, counts: Dict[str, int], n: int,
+                     k: int) -> TypePartition:
+    """Edge-cut assignment of the target type from its incoming padded
+    relations: each destination row's token set is the (type-offset) union
+    of its source reads, so rows sharing sources co-locate."""
+    src_types = sorted({key[0] for key in rels_t})
+    offs, off = {}, 0
+    for s in src_types:
+        offs[s] = off
+        off += counts[s]
+    neigh = []
+    for v in range(n):
+        toks = [r_nbr[v][r_mask[v] > 0] + offs[key[0]]
+                for key, (r_nbr, r_mask) in sorted(rels_t.items())]
+        neigh.append(np.unique(np.concatenate(toks)) if toks
+                     else np.zeros(0, np.int64))
+    return build_type_partition(edge_cut_assign(neigh, max(off, 1), k), k)
+
+
 def _partition_relational(plan, batch: Dict, k: int) -> Dict:
     """RGCN's per-relation ``[N_d, Kd]`` padded layout: only relations into
     the target type feed the head; the target is edge-cut-assigned, every
@@ -360,19 +384,7 @@ def _partition_relational(plan, batch: Dict, k: int) -> Dict:
     rels = {key: (np.asarray(v[0]), np.asarray(v[1]))
             for key, v in batch["rels"].items() if key[2] == t}
     counts = {ty: int(c) for ty, c in batch["counts"].items()}
-    n = counts[t]
-    src_types = sorted({key[0] for key in rels})
-    offs, off = {}, 0
-    for s in src_types:
-        offs[s] = off
-        off += counts[s]
-    neigh = []
-    for v in range(n):
-        toks = [r_nbr[v][r_mask[v] > 0] + offs[key[0]]
-                for key, (r_nbr, r_mask) in sorted(rels.items())]
-        neigh.append(np.unique(np.concatenate(toks)) if toks
-                     else np.zeros(0, np.int64))
-    tp_t = build_type_partition(edge_cut_assign(neigh, max(off, 1), k), k)
+    tp_t = _target_edge_cut(rels, counts, counts[t], k)
     tps: Dict[str, TypePartition] = {t: tp_t}  # self-relations reuse it
     edge_lists: EdgeLists = {t: []}  # target always gets a (maybe empty) halo
     for key, (r_nbr, r_mask) in sorted(rels.items()):
@@ -392,6 +404,100 @@ def _partition_relational(plan, batch: Dict, k: int) -> Dict:
             mask_p[j, : len(rows)] = r_mask[rows]
         rels_p[key] = (jnp.asarray(nbr_p), jnp.asarray(mask_p))
     part = _part_tables(tps, halo_src, halo_mask, batch["feats"], tp_t, k,
+                        cut, total)
+    part["rels"] = rels_p
+    return {
+        "feat_dims": batch["feat_dims"],
+        "counts": batch["counts"],
+        # keys only (init splits w_rel per sorted key); tables live in `part`
+        "rels": {key: () for key in batch["rels"]},
+        "part": part,
+    }
+
+
+def _partition_relational_ml(plan, batch: Dict, k: int) -> Dict:
+    """RGCN's padded layout for an L-layer stack: hidden rel_sum layers
+    update *every* node type, so every relation partitions — each on its
+    **destination type's** owners — and every type gets halo tables covering
+    the union of reads from all of its readers' owned destination rows.
+    The halo maps stay graph-invariant across layers; only the exchanged
+    features change, so ``gather_halo`` simply re-runs per layer.
+
+    Assignment: the target type keeps the metapath-aware edge-cut (same
+    construction as the single-layer path); the remaining types are
+    reference-majority assigned from relations whose destination type is
+    already assigned (breadth-first from the target, so votes always come
+    from settled owners); types nobody reads fill round-robin.
+    """
+    t = plan.target
+    rels = {key: (np.asarray(v[0]), np.asarray(v[1]))
+            for key, v in batch["rels"].items()}
+    counts = {ty: int(c) for ty, c in batch["counts"].items()}
+    # --- target assignment: edge-cut over the relations INTO the target
+    # (same construction as the single-layer path) ---
+    rels_t = {key: v for key, v in rels.items() if key[2] == t}
+    tps: Dict[str, TypePartition] = {
+        t: _target_edge_cut(rels_t, counts, counts[t], k)}
+    # --- remaining types: reference majority from settled destinations ---
+    remaining = [ty for ty in sorted(counts) if ty not in tps]
+    while remaining:
+        progress = False
+        for ty in list(remaining):
+            votes = np.zeros((counts[ty], k), np.float64)
+            seen = False
+            for key, (r_nbr, r_mask) in sorted(rels.items()):
+                s, _, d = key
+                if s != ty or d not in tps:
+                    continue
+                di, ci = np.nonzero(r_mask > 0)
+                np.add.at(votes, (r_nbr[di, ci], tps[d].owner[di]), 1.0)
+                seen = True
+            if seen:
+                tps[ty] = build_type_partition(reference_assign(votes, k), k)
+                remaining.remove(ty)
+                progress = True
+        if not progress:  # types unreachable from the target: round-robin
+            for ty in remaining:
+                owner = (np.arange(counts[ty]) % k).astype(np.int32)
+                tps[ty] = build_type_partition(owner, k)
+            remaining = []
+    # --- halos per source type from ALL relations (per-dst-type owners) ---
+    halo_src: Dict[str, np.ndarray] = {}
+    halo_mask: Dict[str, np.ndarray] = {}
+    luts: Dict[str, np.ndarray] = {}
+    cut = total = 0
+    for s in sorted(counts):
+        pairs = []  # (dst_owner per edge, src global ids)
+        for key, (r_nbr, r_mask) in sorted(rels.items()):
+            if key[0] != s:
+                continue
+            di, ci = np.nonzero(r_mask > 0)
+            pairs.append((tps[key[2]].owner[di], r_nbr[di, ci]))
+        referenced = []
+        for j in range(k):
+            ids = [src[downer == j] for downer, src in pairs]
+            referenced.append(np.unique(np.concatenate(ids)) if ids
+                              else np.zeros(0, np.int64))
+        hs, hm, halos = build_halo(tps[s], referenced, k)
+        halo_src[s], halo_mask[s] = hs, hm
+        luts[s] = local_lut(tps[s], halos, k)
+        for downer, src in pairs:
+            cut += int((tps[s].owner[src] != downer).sum())
+            total += len(src)
+    # --- relabel every relation on its destination type's owners ---
+    rels_p: Dict = {}
+    for key, (r_nbr, r_mask) in rels.items():
+        s, _, d = key
+        tpd = tps[d]
+        kd = r_nbr.shape[1]
+        nbr_p = np.zeros((k, tpd.n_max, kd), np.int32)
+        mask_p = np.zeros((k, tpd.n_max, kd), np.float32)
+        for j in range(k):
+            rows = np.flatnonzero(tpd.owner == j)
+            nbr_p[j, : len(rows)] = np.maximum(luts[s][j, r_nbr[rows]], 0)
+            mask_p[j, : len(rows)] = r_mask[rows]
+        rels_p[key] = (jnp.asarray(nbr_p), jnp.asarray(mask_p))
+    part = _part_tables(tps, halo_src, halo_mask, batch["feats"], tps[t], k,
                         cut, total)
     part["rels"] = rels_p
     return {

@@ -132,7 +132,8 @@ def run_hgnn(args) -> None:
                      use_pallas=args.use_pallas,
                      degree_buckets=args.degree_buckets,
                      fuse_na_sa=args.fuse_na_sa,
-                     partitions=args.partitions)
+                     partitions=args.partitions,
+                     layers=args.layers)
     hg = make_dataset(args.dataset)
     mesh = None
     if args.mesh_data * args.mesh_model > 1:
@@ -149,9 +150,11 @@ def run_hgnn(args) -> None:
                  if mesh else "single-device")
     na = built.plan.na
     part = built.plan.partition
+    n_l = built.plan.n_layers
     print(f"{cfg.model}/{cfg.dataset} [na={na.kind}/{na.layout}"
           f"{' +fused-sa' if built.plan.sa.fuse_epilogue else ''}"
-          f"{f' +partitions={part.k}' if part is not None else ''}] "
+          f"{f' +partitions={part.k}' if part is not None else ''}"
+          f"{f' x{n_l}layers' if n_l > 1 else ''}] "
           f"logits {logits.shape} on {mesh_desc}: {dt*1e3:.2f} ms/iter")
     if args.characterize:
         # one stage_records call covers both the per-stage table and the
@@ -167,7 +170,9 @@ def run_hgnn(args) -> None:
             pt = recs["partition"]
             print(f"  partition: k={pt['k']} cut_ratio={pt['cut_ratio']:.3f} "
                   f"halo_rows={pt['halo_rows']:.0f} "
-                  f"halo_bytes={pt['halo_bytes']:.3g}")
+                  f"halo_bytes={pt['halo_bytes']:.3g} "
+                  f"(x{pt['layers']} layers = "
+                  f"{pt['halo_bytes_total']:.3g} total)")
 
 
 def main() -> None:
@@ -197,6 +202,11 @@ def main() -> None:
                     help=">=1: graph-partitioned execution with that many "
                          "edge-cut partitions (per-partition FP/NA + explicit "
                          "halo feature exchange; repro.dist.partition)")
+    ap.add_argument("--layers", type=int, default=1,
+                    help=">1: stack that many FP->NA->SA layers (per-layer "
+                         "params; the graph-side index tables are built once "
+                         "and reused; partitioned runs re-exchange updated "
+                         "halo features every layer)")
     ap.add_argument("--fuse-na-sa", action="store_true",
                     help="fused NA→SA epilogue: SA pass-1 scores accumulate "
                          "inside the NA kernel (stacked layout)")

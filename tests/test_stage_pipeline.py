@@ -114,6 +114,24 @@ MATRIX = [
     ("rgcn", {"fused": True}, {"fused": True, "partitions": 4}, None, None),
     ("magnn", {}, {"partitions": 1}, None, None),
     ("magnn", {}, {"partitions": 4}, None, None),
+    # multi-layer stacks (L=2): every layout pair must agree at depth, and
+    # the partitioned flow (per-layer halo re-exchange over the
+    # graph-invariant maps) must match the unpartitioned L=2 forward
+    ("han", {"fused": False, "layers": 2}, {"fused": True, "layers": 2},
+     None, None),
+    ("han", {"fused": True, "layers": 2},
+     {"fused": True, "layers": 2, "degree_buckets": 3}, None, None),
+    ("han", {"fused": True, "layers": 2},
+     {"fused": True, "layers": 2, "fuse_na_sa": True}, None, None),
+    ("han", {"fused": True, "layers": 2},
+     {"fused": True, "layers": 2, "partitions": 4}, None, None),
+    ("rgcn", {"fused": False, "layers": 2}, {"fused": True, "layers": 2},
+     None, None),
+    ("rgcn", {"fused": True, "layers": 2},
+     {"fused": True, "layers": 2, "degree_buckets": 3}, None, None),
+    ("rgcn", {"fused": True, "layers": 2},
+     {"fused": True, "layers": 2, "partitions": 4}, None, None),
+    ("magnn", {"layers": 2}, {"layers": 2, "partitions": 4}, None, None),
 ]
 
 
@@ -145,6 +163,99 @@ def test_gcn_runs_through_executor():
     m, params, out = _forward(cfg, hg)
     assert m.plan().na.kind == "gcn" and m.plan().sa.kind == "none"
     assert out.shape[1] == 5 and np.isfinite(out).all()
+
+
+def test_gcn_two_layer_matches_manual_block_composition():
+    """GCN depth semantics pinned by hand: one LayerPlan is one
+    agg(relu(agg(h @ w))) block, L=2 stacks two blocks before the head."""
+    from repro.data.synthetic import make_reddit_like
+
+    hg = make_reddit_like(scale=0.005)
+    cfg = HGNNConfig(model="gcn", dataset="reddit", hidden=16, n_classes=5,
+                     layers=2)
+    m = get_model(cfg)
+    batch = m.prepare(hg)
+    params = m.init(jax.random.key(0), batch)
+    got = np.asarray(m.forward(params, batch))
+
+    def block(h, w):
+        h = h @ w
+        z = jax.nn.relu(stages.mean_aggregate_csr(
+            h, batch["seg"], batch["idx"], h.shape[0]))
+        return stages.mean_aggregate_csr(z, batch["seg"], batch["idx"],
+                                         z.shape[0])
+
+    want = block(block(batch["x"], params["w1"]),
+                 params["layers"][0]["fp"]) @ params["w2"]
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_multilayer_forward_differs_from_single_layer(tiny_hg):
+    """A second layer must actually change the output (no silent L=1
+    fallthrough) while keeping shapes and finiteness."""
+    for model, kw in [("han", {"fused": True}), ("rgcn", {"fused": True}),
+                      ("magnn", {})]:
+        _, _, one = _forward(_cfg(model, **kw), tiny_hg)
+        _, _, two = _forward(_cfg(model, layers=2, **kw), tiny_hg)
+        assert one.shape == two.shape
+        assert np.isfinite(two).all()
+        assert np.abs(one - two).max() > 1e-6, model
+
+
+def test_multilayer_stage_records_per_layer(tiny_hg):
+    """The acceptance invariant: an L-layer run's stage_records carries
+    per-layer ``L{i}.FP/NA/SA`` whose sums reconcile with the end-to-end
+    totals; partitioned runs add per-layer ``L{i}.gather_halo`` records and
+    the partition summary reports halo-bytes × L."""
+    cfg = _cfg("han", fused=True, layers=2)
+    m = get_model(cfg)
+    batch = m.prepare(tiny_hg)
+    params = m.init(jax.random.key(0), batch)
+    recs = m.stage_records(params, batch)
+    assert set(recs["stages"]) == {
+        "L1.FP", "L1.NA", "L1.SA", "L2.FP", "L2.NA", "L2.SA", "head"}
+    for name, r in recs["stages"].items():
+        assert r["flops"] > 0 and r["hbm_bytes"] > 0, name
+    assert recs["total"]["flops"] == pytest.approx(
+        sum(r["flops"] for r in recs["stages"].values()))
+    assert recs["total"]["hbm_bytes"] == pytest.approx(
+        sum(r["hbm_bytes"] for r in recs["stages"].values()))
+
+    cfg_p = _cfg("han", fused=True, layers=2, partitions=3)
+    m = get_model(cfg_p)
+    batch = m.prepare(tiny_hg)
+    params = m.init(jax.random.key(0), batch)
+    recs = m.stage_records(params, batch)
+    assert {"L1.gather_halo", "L2.gather_halo"} <= set(recs["stages"])
+    pt = recs["partition"]
+    assert pt["layers"] == 2
+    gh_sum = (recs["stages"]["L1.gather_halo"]["halo_bytes"]
+              + recs["stages"]["L2.gather_halo"]["halo_bytes"])
+    assert pt["halo_bytes_total"] == pytest.approx(gh_sum)
+    assert pt["halo_bytes_total"] == pytest.approx(2 * pt["halo_bytes"])
+    assert pt["halo_bytes"] > 0
+
+
+def test_multilayer_params_layout(tiny_hg):
+    """Layer 0 stays at the pytree root (bit-exact single-layer layout);
+    hidden layers ride params["layers"] with mirrored leaf names, and the
+    same init key yields identical layer-0 leaves for L=1 and L=2."""
+    cfg1 = _cfg("han", fused=True)
+    m1 = get_model(cfg1)
+    b1 = m1.prepare(tiny_hg)
+    p1 = m1.init(jax.random.key(0), b1)
+    cfg2 = _cfg("han", fused=True, layers=2)
+    m2 = get_model(cfg2)
+    b2 = m2.prepare(tiny_hg)
+    p2 = m2.init(jax.random.key(0), b2)
+    assert set(p2) == set(p1) | {"layers"}
+    for leaf1, leaf2 in zip(jax.tree.leaves(p1),
+                            jax.tree.leaves({k: v for k, v in p2.items()
+                                             if k != "layers"})):
+        np.testing.assert_array_equal(np.asarray(leaf1), np.asarray(leaf2))
+    hidden = p2["layers"][0]
+    assert {"fp", "gat", "sem"} <= set(hidden)
+    assert hidden["fp"].shape == (cfg2.hidden, cfg2.hidden)
 
 
 def test_executor_sharded_8dev_matches_single_device(tiny_hg):
@@ -179,6 +290,7 @@ def test_executor_sharded_8dev_matches_single_device(tiny_hg):
         cases = [
             dict(model="han", fused=True),
             dict(model="han", fused=True, degree_buckets=3),
+            dict(model="han", fused=True, layers=2),
             dict(model="rgcn", fused=True, degree_buckets=3),
             dict(model="magnn"),
         ]
@@ -197,7 +309,7 @@ def test_executor_sharded_8dev_matches_single_device(tiny_hg):
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, env=env, timeout=600)
     assert r.returncode == 0, r.stdout + r.stderr
-    assert r.stdout.count("OK") == 4
+    assert r.stdout.count("OK") == 5
 
 
 def test_partitioned_8dev_matches_single_device(tiny_hg):
@@ -233,7 +345,9 @@ def test_partitioned_8dev_matches_single_device(tiny_hg):
         mesh = make_smoke_mesh(data=4, model=2)
         cases = [
             dict(model="han", fused=True, partitions=4),
+            dict(model="han", fused=True, partitions=4, layers=2),
             dict(model="rgcn", fused=True, partitions=4),
+            dict(model="rgcn", fused=True, partitions=4, layers=2),
             dict(model="magnn", partitions=4),
         ]
         for kw in cases:
@@ -245,8 +359,11 @@ def test_partitioned_8dev_matches_single_device(tiny_hg):
             plain = np.asarray(ref.fn(ref.params, ref.batch))
             np.testing.assert_allclose(sharded, plain, rtol=2e-4, atol=2e-4)
             recs = built.executor.stage_records(built.params, built.batch)
-            assert recs["stages"]["gather_halo"]["halo_bytes"] > 0, kw
+            gh = [n for n in recs["stages"] if n.endswith("gather_halo")]
+            assert len(gh) == kw.get("layers", 1), kw
+            assert all(recs["stages"][n]["halo_bytes"] > 0 for n in gh), kw
             assert recs["partition"]["cut_edges"] > 0, kw
+            assert recs["partition"]["layers"] == kw.get("layers", 1), kw
             print("OK", kw)
     """)
     env = {**os.environ, "PYTHONPATH": "src",
@@ -254,7 +371,7 @@ def test_partitioned_8dev_matches_single_device(tiny_hg):
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, env=env, timeout=600)
     assert r.returncode == 0, r.stdout + r.stderr
-    assert r.stdout.count("OK") == 3
+    assert r.stdout.count("OK") == 5
 
 
 # ---------------------------------------------------------------------------
@@ -284,6 +401,40 @@ def test_plan_layout_resolution():
                        partitions=4)).plan()
     assert not p.sa.fuse_epilogue  # epilogue needs the single-table stack
     assert get_model(_cfg("rgcn", fused=True)).plan().partition is None
+    # multi-layer plans: StagePlan is the L-layer container; layer 0 owns
+    # the raw-feature FP, hidden layers the per-model re-projection kind;
+    # plan.fp/na/sa keep reading layer 0
+    p = get_model(_cfg("han", fused=True, layers=3)).plan()
+    assert p.n_layers == 3 and len(p.layers) == 3
+    assert p.layers[0].fp.kind == "per_type" and p.layers[0].fp.heads
+    assert all(lp.fp.kind == "dense" for lp in p.layers[1:])
+    assert all(lp.handoff == "target" for lp in p.layers)
+    assert p.na is p.layers[0].na and p.fp is p.layers[0].fp
+    p = get_model(_cfg("rgcn", fused=True, layers=2)).plan()
+    assert p.layers[1].fp.kind == "identity"
+    assert all(lp.handoff == "all" for lp in p.layers)
+    p = get_model(_cfg("magnn", layers=2)).plan()
+    assert p.layers[1].handoff == "target+carry"
+    assert set(p.layers[1].carry) == {"D", "A"}
+    assert get_model(_cfg("han", fused=True)).plan().n_layers == 1
+    with pytest.raises(ValueError, match="layers must be >= 1"):
+        _cfg("han", fused=True, layers=0)
+
+
+def test_stageplan_rejects_nonuniform_layers():
+    """The host-side index tables are built once and reused per layer, so
+    NA kind/layout and SA kind must be uniform across the stack."""
+    from repro.core.plan import (FPSpec, HeadSpec, LayerPlan, NASpec, SASpec,
+                                 StagePlan)
+
+    l0 = LayerPlan(fp=FPSpec(), na=NASpec(kind="gat", layout="stacked"),
+                   sa=SASpec(kind="attention"))
+    l1 = LayerPlan(fp=FPSpec(), na=NASpec(kind="gat", layout="csr"),
+                   sa=SASpec(kind="attention"))
+    with pytest.raises(ValueError, match="layer-uniform"):
+        StagePlan(model="x", target="M", layers=(l0, l1), head=HeadSpec())
+    with pytest.raises(ValueError, match="at least one"):
+        StagePlan(model="x", target="M", layers=(), head=HeadSpec())
 
 
 def test_partitioned_stage_records_report_halo_traffic(tiny_hg):
