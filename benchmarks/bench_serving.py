@@ -1,0 +1,79 @@
+"""Request-path serving: neighbor-sampled minibatches through the slot-based
+continuous-batching engine (repro.serve).
+
+Per case (model/dataset × slot count): a fixed deterministic request queue
+(``default_rng(0)`` target ids, mixed sizes) is served end to end after the
+per-rung warmup.  Rows record
+
+* the mean per-step wall (us) — latency, recorded for the handbook but NOT
+  gated (shared-runner CPU noise swings walls 3x);
+* the deterministic serving quantities ``run.py --check`` gates: sampled
+  frontier bytes, bucket-ladder hit counts, step count, and the post-warmup
+  recompile count (must stay 0 — the ladder is the whole shape space).
+
+Rows fold into ``BENCH_hgnn.json`` under ``serving``.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import HGNNConfig
+from repro.core.models import get_model
+from repro.data.synthetic import make_dataset
+from repro.serve.engine import HGNNRequest, HGNNServeEngine
+from repro.serve.sampler import HGNNSampler
+
+CASES = [("han", "imdb"), ("rgcn", "imdb")]
+SLOTS = (4, 8)
+N_REQUESTS = 32
+FANOUT = 8
+if os.environ.get("BENCH_SMOKE"):  # CI smoke: one case, one slot plan
+    CASES = [("han", "imdb")]
+    SLOTS = (8,)
+
+
+def run() -> list:
+    import jax
+
+    rows: list = []
+    for model, ds in CASES:
+        hg = make_dataset(ds)
+        cfg = HGNNConfig(model=model, dataset=ds, hidden=64, n_heads=8,
+                         n_classes=8, max_degree=32, fused=True,
+                         fanout=FANOUT)
+        m = get_model(cfg)
+        batch = m.prepare(hg)
+        params = m.init(jax.random.key(0), batch)
+        fn = jax.jit(m.forward)
+        sampler = HGNNSampler(m.plan(), cfg, hg)
+        n_t = hg.node_counts[m.plan().target]
+        for slots in SLOTS:
+            engine = HGNNServeEngine(m.executor, params, sampler,
+                                     slots=slots, slot_targets=4, fn=fn)
+            engine.warmup()
+            rng = np.random.default_rng(0)
+            reqs = [HGNNRequest(targets=rng.integers(
+                0, n_t, size=int(rng.integers(1, 9))))
+                for _ in range(N_REQUESTS)]
+            n_targets = sum(len(r.targets) for r in reqs)
+            engine.serve(reqs)
+            st = engine.stats()
+            rungs = ";".join(f"{i}:{n}" for i, n in st["rung_hits"].items())
+            rows.append((
+                f"serving/{model}/{ds}/s{slots}",
+                st["wall_mean_ms"] * 1e3,
+                f"requests={N_REQUESTS} targets={n_targets} "
+                f"steps={st['steps']} "
+                f"recompiles={st['compiles_after_warmup']} "
+                f"frontier_bytes={st['frontier_bytes']:.0f} "
+                f"truncated={st['truncated_rows']} rung_hits={rungs} "
+                f"throughput_tps="
+                f"{n_targets / max(st['wall_total_s'], 1e-9):.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -2,13 +2,15 @@
 Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py contract).
 
 When the HGNN trajectory modules run (``bench_stage_breakdown``,
-``bench_na_fused``, ``bench_sa_epilogue``, ``bench_partition`` and/or
-``bench_layers``), their rows are also folded into ``BENCH_hgnn.json`` at
-the repo root — the machine-readable perf baseline future PRs diff against
-(per-stage wall + characterization breakdown, fused-vs-baseline and
-bucketed-vs-CSR NA speedups + launch counts, the fused NA→SA epilogue's
-saved-HBM-pass snapshot, the partitioned halo-traffic sweep, and the
-L-layer depth sweep with per-layer stage records + halo-bytes × L).
+``bench_na_fused``, ``bench_sa_epilogue``, ``bench_partition``,
+``bench_layers`` and/or ``bench_serving``), their rows are also folded into
+``BENCH_hgnn.json`` at the repo root — the machine-readable perf baseline
+future PRs diff against (per-stage wall + characterization breakdown,
+fused-vs-baseline and bucketed-vs-CSR NA speedups + launch counts, the
+fused NA→SA epilogue's saved-HBM-pass snapshot, the partitioned
+halo-traffic sweep, the L-layer depth sweep with per-layer stage records +
+halo-bytes × L, and the request-path serving sweep with its sampled
+frontier traffic + ladder hit counts).
 
 ``--check`` turns the run into a regression gate: before the new snapshot is
 written, every fresh stage cost (FP/NA/SA and, for partitioned runs, the
@@ -40,6 +42,7 @@ MODULES = [
     "bench_sa_epilogue",         # fused NA->SA epilogue HBM-pass snapshot
     "bench_partition",           # partitioned execution: cut vs halo vs NA
     "bench_layers",              # L-layer depth sweep: stage mix + halo x L
+    "bench_serving",             # request-path slot serving: sampled minibatch
     "bench_lm_roofline",         # 40-cell arch x shape roofline table
 ]
 
@@ -118,6 +121,33 @@ def parse_layers(rows) -> dict:
     return out
 
 
+def parse_serving(rows) -> dict:
+    """``serving/<model>/<ds>/s<slots>`` rows -> {case: record}.
+
+    ``step_us`` is the latency wall (recorded, never gated); the rest are
+    deterministic serving quantities — frontier bytes, ladder hit counts,
+    step/recompile counts — that ``--check`` gates."""
+    out: dict = {}
+    for name, us, derived in rows or []:
+        m = re.fullmatch(r"serving/(\w+)/(\w+)/s(\d+)", name)
+        if not m:
+            continue
+        d = dict(kv.split("=", 1) for kv in derived.split())
+        out[f"{m.group(1)}/{m.group(2)}/s{m.group(3)}"] = {
+            "step_us": round(us, 1),
+            "requests": int(d["requests"]),
+            "targets": int(d["targets"]),
+            "steps": int(d["steps"]),
+            "recompiles": int(d["recompiles"]),
+            "frontier_bytes": float(d["frontier_bytes"]),
+            "truncated": int(d["truncated"]),
+            "rung_hits": {int(kv.split(":")[0]): int(kv.split(":")[1])
+                          for kv in d["rung_hits"].split(";") if kv},
+            "throughput_tps": float(d["throughput_tps"]),
+        }
+    return out
+
+
 def check_regression(results: dict, threshold: float = 0.20) -> None:
     """Bench-regression gate: diff the fresh NA/SA stage costs against the
     committed ``BENCH_hgnn.json``; fail on >``threshold`` regression.
@@ -138,7 +168,8 @@ def check_regression(results: dict, threshold: float = 0.20) -> None:
     sb = results.get("bench_stage_breakdown")
     pt = results.get("bench_partition")
     ly = results.get("bench_layers")
-    if (not sb and not pt and not ly) or not BENCH_JSON.exists():
+    sv = results.get("bench_serving")
+    if (not sb and not pt and not ly and not sv) or not BENCH_JSON.exists():
         return
     try:
         committed = json.loads(BENCH_JSON.read_text())
@@ -265,6 +296,40 @@ def check_regression(results: dict, threshold: float = 0.20) -> None:
                     regressions.append(
                         f"layers/{case} {metric}: {pv:.3g} -> {nv:.3g} "
                         f"(+{100 * (nv / pv - 1):.0f}%)")
+    if sv:
+        # serving gate: wall latencies are recorded but NEVER gated (the
+        # partition-section convention); the gate covers the deterministic
+        # quantities only — sampled frontier bytes and bucket-ladder hit
+        # counts are exact re-runs of the same host sampler on the same
+        # graph and queue, and the post-warmup recompile count must stay 0
+        old_serving = committed.get("serving", {})
+        fresh_serving = parse_serving(sv)
+        if not fresh_serving and old_serving:
+            regressions.append("bench_serving rows parsed to zero cases "
+                               "(row naming / gate regex drift?)")
+        for case, rec in fresh_serving.items():
+            prev = old_serving.get(case)
+            if not prev:
+                continue
+            if rec["recompiles"] > prev.get("recompiles", 0):
+                regressions.append(
+                    f"serving/{case} recompiles: {prev.get('recompiles', 0)} "
+                    f"-> {rec['recompiles']} (post-warmup compilation — a "
+                    "batch shape escaped the ladder)")
+            pv = prev.get("frontier_bytes")
+            if pv and rec["frontier_bytes"] > pv * (1 + threshold):
+                regressions.append(
+                    f"serving/{case} frontier_bytes: {pv:.3g} -> "
+                    f"{rec['frontier_bytes']:.3g} "
+                    f"(+{100 * (rec['frontier_bytes'] / pv - 1):.0f}%)")
+            old_hits = {int(k): v
+                        for k, v in prev.get("rung_hits", {}).items()}
+            for rung, n_prev in old_hits.items():
+                n_new = rec["rung_hits"].get(rung, 0)
+                if n_prev and n_new > n_prev * (1 + threshold):
+                    regressions.append(
+                        f"serving/{case} rung_hits[{rung}]: {n_prev} -> "
+                        f"{n_new} (ladder dispatch drift)")
     if regressions:
         raise SystemExit("bench regression gate (>"
                          f"{int(threshold * 100)}% vs {BENCH_JSON.name}): "
@@ -346,7 +411,12 @@ def write_bench_json(results: dict) -> None:
         # merge per case so a BENCH_SMOKE run (one model, two depths) never
         # shrinks the committed depth sweep
         data.setdefault("layers", {}).update(parse_layers(ly))
-    if sb or nf or se or pt or ly:
+    sv = results.get("bench_serving")
+    if sv:
+        # merge per case so a BENCH_SMOKE run (one case, one slot plan)
+        # never shrinks the committed serving sweep
+        data.setdefault("serving", {}).update(parse_serving(sv))
+    if sb or nf or se or pt or ly or sv:
         BENCH_JSON.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
         print(f"# wrote {BENCH_JSON.name}", flush=True)
 

@@ -286,6 +286,49 @@ def _layers(data: dict) -> list:
     return out
 
 
+def _serving(data: dict) -> list:
+    sv = data.get("serving")
+    if not sv:
+        return []
+    out = [
+        "",
+        "## Request-path serving: sampled minibatches, slot batching "
+        "(`repro.serve`)",
+        "",
+        "Beyond-paper: a fixed 32-request queue drains through the "
+        "slot-based continuous-batching engine (`HGNNServeEngine`) — each "
+        "step unions the active slots' targets, neighbor-samples a relabeled "
+        "subgraph (`HGNNSampler`), snaps it to a shape-bucket ladder rung, "
+        "and runs the same jitted stage-graph forward "
+        "(`benchmarks/bench_serving.py`).  The recompile column is the "
+        "ladder's whole point: 0 after warmup, gated by "
+        "`benchmarks/run.py --check` along with frontier bytes and rung "
+        "hits; walls and throughput are recorded but never gated.",
+        "",
+        "| model/dataset | slots | steps | recompiles | frontier bytes | "
+        "rung hits | step wall | targets/s |",
+        "| --- | --- | --- | --- | --- | --- | --- | --- |",
+    ]
+
+    def sort_key(case):
+        base, _, spart = case.rpartition("/s")
+        return (base, int(spart) if spart.isdigit() else 0)
+
+    for case in sorted(sv, key=sort_key):
+        base, _, slots = case.rpartition("/s")
+        r = sv[case]
+        hits = "; ".join(f"r{i}: {r['rung_hits'][i]}"
+                         for i in sorted(r.get("rung_hits", {}),
+                                         key=lambda k: int(k)))
+        out.append(
+            f"| {base} | {slots} | {r.get('steps', 0)} | "
+            f"{r.get('recompiles', 0)} | "
+            f"{_bytes(r.get('frontier_bytes', 0.0))} | {hits or '—'} | "
+            f"{_us(r['step_us']) if 'step_us' in r else '—'} | "
+            f"{r.get('throughput_tps', 0.0):.0f} |")
+    return out
+
+
 def render(data: dict) -> str:
     lines = [HEADER]
     lines += _stage_breakdown(data)
@@ -294,15 +337,17 @@ def render(data: dict) -> str:
     lines += _sa_epilogue(data)
     lines += _partition(data)
     lines += _layers(data)
+    lines += _serving(data)
     lines += [
         "",
         "## Regenerating",
         "",
         "```bash",
         "# refresh the snapshot (stage breakdown + NA/SA fusion + partition",
-        "# + depth sweep)",
+        "# + depth sweep + request-path serving)",
         "PYTHONPATH=src:. python benchmarks/run.py bench_stage_breakdown \\",
-        "    bench_na_fused bench_sa_epilogue bench_partition bench_layers",
+        "    bench_na_fused bench_sa_epilogue bench_partition bench_layers \\",
+        "    bench_serving",
         "# re-render this page",
         "python scripts/gen_characterization.py",
         "```",

@@ -180,6 +180,15 @@ class HGNNConfig:
     # (built once in prepare()); each extra layer adds its own FP/NA/SA
     # params and, when partitioned, re-exchanges the updated halo features.
     layers: int = 1
+    # Request-path serving (repro.serve.sampler): >= 1 declares the plan
+    # sampled-minibatch capable with that per-hop neighbor fan-out cap.
+    # 0 keeps the full-graph execution (prepare() builds the whole graph).
+    fanout: int = 0
+    # Shape-bucket ladder for sampled batches: (t_cap, f_cap) rungs the
+    # sampler pads every minibatch to, so the jitted executor compiles one
+    # forward per rung at warmup and never recompiles while serving.
+    # () = a small automatic ladder derived from fanout/layers.
+    sample_ladder: Tuple[Tuple[int, int], ...] = ()
     seed: int = 0
 
     def __post_init__(self):

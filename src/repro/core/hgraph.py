@@ -44,6 +44,13 @@ class HeteroGraph:
     def feat_dim(self, t: str) -> int:
         return int(self.features[t].shape[1])
 
+    def in_neighbors(self, key: Relation, u: int) -> np.ndarray:
+        """Global source ids with an edge into destination node ``u`` under
+        ``key`` — the request-path sampler's ground truth: every neighbor a
+        sampled minibatch wires for (key, u) must be in this set."""
+        adj_in = self.relations[key].T.tocsr()
+        return adj_in.indices[adj_in.indptr[u]: adj_in.indptr[u + 1]]
+
     def validate(self) -> None:
         for (s, r, d), a in self.relations.items():
             assert a.shape == (self.node_counts[s], self.node_counts[d]), (

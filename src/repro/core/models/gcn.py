@@ -20,8 +20,8 @@ from repro.core import metapath as mp
 from repro.core import stages
 from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
-from repro.core.plan import (FPSpec, HeadSpec, LayerPlan, NASpec, SASpec,
-                             StagePlan)
+from repro.core.plan import (FPSpec, HeadSpec, LayerPlan, NASpec, SampleSpec,
+                             SASpec, StagePlan, default_sample_ladder)
 from repro.data.synthetic import DATASET_TARGET
 
 
@@ -34,6 +34,15 @@ class GCN(PlannedModel):
         if self.cfg.partitions >= 1:
             raise ValueError("gcn runs the homogeneous CSR baseline; it has "
                              "no partitioned execution layout")
+        cfg = self.cfg
+        sample = None
+        if cfg.fanout >= 1:
+            # each LayerPlan runs TWO csr aggregations -> 2 hops per layer
+            sample = SampleSpec(
+                fanout=cfg.fanout,
+                ladder=(cfg.sample_ladder or default_sample_ladder(
+                    cfg.fanout, cfg.fanout, 2 * cfg.layers)),
+                seed=cfg.seed)
         # one LayerPlan = one agg(relu(agg(h @ w))) block (the paper's
         # 2-conv GCN); extra layers stack that block with fresh [D, D]
         # combination weights before the classifier head
@@ -47,6 +56,7 @@ class GCN(PlannedModel):
                           sa=SASpec(kind="none"), handoff="target")
                 for l in range(self.cfg.layers)),
             head=HeadSpec(kind="linear", param="w2"),
+            sample=sample,
         )
 
     def prepare(self, hg: HeteroGraph) -> Dict:

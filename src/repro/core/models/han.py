@@ -28,7 +28,8 @@ from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
 from repro.core.plan import (BUCKETED_BATCH_SPECS, PARTITION_BATCH_SPECS,
                              STACKED_BATCH_SPECS, FPSpec, HeadSpec, LayerPlan,
-                             NASpec, PartitionSpec, SASpec, StagePlan)
+                             NASpec, PartitionSpec, SampleSpec, SASpec,
+                             StagePlan, default_sample_ladder)
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
@@ -59,6 +60,16 @@ class HAN(PlannedModel):
         sa = SASpec(kind="attention", stacked=cfg.fused,
                     fuse_epilogue=(cfg.fuse_na_sa and layout == "stacked"
                                    and part is None))
+        sample = None
+        if cfg.fanout >= 1:
+            # per-hop width: every metapath contributes up to the padded
+            # table's effective fan-out per target row
+            k = min(cfg.fanout, cfg.max_degree)
+            sample = SampleSpec(
+                fanout=cfg.fanout,
+                ladder=(cfg.sample_ladder or default_sample_ladder(
+                    cfg.fanout, len(self.metapaths) * k, cfg.layers)),
+                seed=cfg.seed)
         # layer 0 projects the raw per-type features; the metapath graphs
         # are target->target, so every hidden layer re-projects only the
         # previous SA output (a dense [D, D] matmul, reshaped to heads)
@@ -78,6 +89,7 @@ class HAN(PlannedModel):
                          else BUCKETED_BATCH_SPECS if layout == "bucketed"
                          else STACKED_BATCH_SPECS),
             partition=part,
+            sample=sample,
         )
 
     # ---------------- Stage 1: Subgraph Build (host) ----------------

@@ -26,7 +26,8 @@ from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
 from repro.core.plan import (INSTANCE_BATCH_SPECS, PARTITION_BATCH_SPECS,
                              FPSpec, HeadSpec, LayerPlan, NASpec,
-                             PartitionSpec, SASpec, StagePlan)
+                             PartitionSpec, SampleSpec, SASpec, StagePlan,
+                             default_sample_ladder)
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
@@ -49,6 +50,19 @@ class MAGNN(PlannedModel):
         # type) before the next round of gathers
         carry = tuple(sorted({ty for p in self.metapaths for ty in p}
                              - {self.target}))
+        sample = None
+        if cfg.fanout >= 1:
+            # instances per target are the MAGNN fan-out knob; every kept
+            # instance pulls its full node path into the frontier
+            k = min(cfg.fanout, cfg.max_instances)
+            width = (len(self.metapaths) * k
+                     * max(len(p) for p in self.metapaths))
+            sample = SampleSpec(
+                fanout=cfg.fanout,
+                ladder=(cfg.sample_ladder
+                        or default_sample_ladder(cfg.fanout, width,
+                                                 cfg.layers)),
+                seed=cfg.seed)
         return StagePlan(
             model="magnn",
             target=self.target,
@@ -61,6 +75,7 @@ class MAGNN(PlannedModel):
             batch_specs=(PARTITION_BATCH_SPECS if part is not None
                          else INSTANCE_BATCH_SPECS),
             partition=part,
+            sample=sample,
         )
 
     # ---------------- Stage 1: Subgraph Build (host, sampled instances) -----

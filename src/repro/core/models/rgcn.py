@@ -25,7 +25,8 @@ from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
 from repro.core.plan import (PARTITION_BATCH_SPECS, RELATION_BATCH_SPECS,
                              FPSpec, HeadSpec, LayerPlan, NASpec,
-                             PartitionSpec, SASpec, StagePlan)
+                             PartitionSpec, SampleSpec, SASpec, StagePlan,
+                             default_sample_ladder)
 from repro.data.synthetic import DATASET_TARGET
 
 
@@ -51,6 +52,17 @@ class RGCN(PlannedModel):
                     f"layout (fused=True, no degree buckets); got {layout!r}")
             part = PartitionSpec(k=cfg.partitions)
         na = NASpec(kind="mean", layout=layout, use_pallas=cfg.use_pallas)
+        sample = None
+        if cfg.fanout >= 1:
+            # the relation count is graph-side (plan() has no hg); size the
+            # auto ladder for a nominal 4 relations — the sampler clamps
+            # per-type and counts any truncation
+            k = min(cfg.fanout, cfg.max_degree)
+            sample = SampleSpec(
+                fanout=cfg.fanout,
+                ladder=(cfg.sample_ladder or default_sample_ladder(
+                    cfg.fanout, 4 * k, cfg.layers)),
+                seed=cfg.seed)
         # rel_sum SA updates EVERY node type (handoff="all"); hidden layers
         # need no FP — the per-layer w_rel / w_self matmuls inside NA/SA are
         # the layer's linear transform (h' = relu(W_0 h + sum mean(h_s) W_r))
@@ -67,6 +79,7 @@ class RGCN(PlannedModel):
             batch_specs=(PARTITION_BATCH_SPECS if part is not None
                          else RELATION_BATCH_SPECS),
             partition=part,
+            sample=sample,
         )
 
     # ---------------- Stage 1: Relation Walk (host) ----------------

@@ -370,11 +370,12 @@ class StageGraphExecutor:
                 agg = stages.mean_aggregate_csr(h[s], rel[0], rel[1],
                                                 h[d].shape[0])
             elif plan.na.layout == "bucketed":
-                # bucket row_ids partition the destination rows, so the row
-                # count is static even when batch["counts"] rides a tracer
-                n_rows = sum(b[0].shape[0] for b in rel)
+                # the destination table's static leading dim is the row
+                # count (jit-safe; for full-graph batches the bucket row_ids
+                # partition exactly those rows, for sampled rung-padded
+                # buckets the out-of-range pad row_ids scatter-drop)
                 agg = stages.mean_aggregate_bucketed(
-                    h[s], rel, n_rows, agg_fn=agg_fn)
+                    h[s], rel, h[d].shape[0], agg_fn=agg_fn)
             else:  # padded
                 agg = stages.mean_aggregate_padded_sharded(
                     h[s], rel[0], rel[1], agg_fn=agg_fn)
@@ -507,17 +508,31 @@ class StageGraphExecutor:
             return z
         if plan.sa.kind == "rel_sum":
             return self._rel_sum(params, z["__h__"], z)
-        # attention
+        # attention; sampled minibatches carry a row-validity mask so the
+        # rung padding never shifts the semantic score means
+        row_mask = batch.get("row_mask")
         if isinstance(z, tuple):  # fused NA→SA epilogue: (z, pass-1 scores)
             z_stack, wp = z
+            if row_mask is not None:
+                # the kernel's pass-1 mean ran over every row incl. the
+                # rung pads; a pad row is a zero row (all-masked neighbor
+                # lists aggregate to 0), so each contributes exactly
+                # c = q·tanh(b) to the mean — remove them in closed form:
+                # wp_masked = (wp·N − n_pad·c) / n_real.  n_pad == 0 (full
+                # batches / exact rungs) leaves wp bitwise unchanged.
+                sem = params["sem"]
+                c = jnp.tanh(sem["b"]) @ sem["q"]
+                n_real = jnp.maximum(row_mask.sum(), 1.0)
+                n_pad = row_mask.shape[0] - row_mask.sum()
+                wp = wp + n_pad * (wp - c) / n_real
             beta = jax.nn.softmax(wp)  # O(P) softmax
             # pass 2 (combine) is the only remaining full read of z
             return _kops().semantic_combine(z_stack, beta,
                                             use_pallas=plan.na.use_pallas)
         if plan.sa.stacked:
             z = stages.shard(z, *stages.HGNN_STAGE_SPECS["sa_stacked"])
-            return semantics.semantic_attention(params["sem"], z)
-        return semantics.semantic_attention_list(params["sem"], z)
+            return semantics.semantic_attention(params["sem"], z, row_mask)
+        return semantics.semantic_attention_list(params["sem"], z, row_mask)
 
     def _sa_partitioned(self, params: Dict, batch: Dict, z):
         """SA on the partition-local stacks.  Attention reduces per-partition
@@ -628,17 +643,26 @@ class StageGraphExecutor:
         return fns
 
     def stage_records(self, params: Dict, batch: Dict,
-                      n_chips: int = 1) -> Dict:
+                      n_chips: int = 1, sample_meta: Dict = None) -> Dict:
         """Per-stage characterization: stage name → FLOPs / HBM bytes /
         roofline terms via ``core/characterize.py``, from the exact stage
         functions the executor serves.  ``total`` is the stage-additive sum
         (the fully-jitted forward may fuse across stage boundaries, so the
-        per-stage attribution is the meaningful decomposition)."""
+        per-stage attribution is the meaningful decomposition).
+
+        ``sample_meta`` (request-path serving): the sampler's host-side
+        batch metadata; adds the SAMPLE stage — the paper taxonomy's
+        Subgraph Build, realized as the neighbor-sampling gather — as the
+        first record (``characterize.sample_traffic``), with its traffic
+        kept out of the compiled-stage ``total``."""
         from repro.core.characterize import (analyze_hlo_text,
-                                             partition_traffic, roofline)
+                                             partition_traffic, roofline,
+                                             sample_traffic)
 
         fns = self.stage_fns(params, batch)
         recs: Dict[str, Dict] = {}
+        if sample_meta is not None:
+            recs["SAMPLE"] = sample_traffic(sample_meta)
         for name, (fn, args) in fns.items():
             rep = analyze_hlo_text(fn.lower(*args).compile().as_text())
             recs[name] = {
@@ -648,9 +672,9 @@ class StageGraphExecutor:
                 "hbm_bytes_by_class": rep["hbm_bytes_by_class"],
                 "roofline": roofline(rep, n_chips, 0.0),
             }
-        total = {
-            "flops": sum(r["flops"] for r in recs.values()),
-            "hbm_bytes": sum(r["hbm_bytes"] for r in recs.values()),
+        total = {  # compiled stages only — SAMPLE is a host-side gather
+            "flops": sum(recs[n]["flops"] for n in fns),
+            "hbm_bytes": sum(recs[n]["hbm_bytes"] for n in fns),
         }
         out = {"stages": recs, "total": total}
         gh_names = [n for n in fns if n.endswith("gather_halo")]

@@ -126,6 +126,55 @@ class PartitionSpec:
 
 
 @dataclass(frozen=True)
+class SampleSpec:
+    """Request-path neighbor sampling (``repro.serve.sampler``).
+
+    Serving traffic arrives as requests — "classify these target vertices" —
+    not as a full-graph forward.  A plan that carries a ``SampleSpec``
+    declares that its batches may be *sampled minibatches*: for a set of
+    target vertices the sampler extracts the k-hop / per-metapath
+    neighborhood, relabels it into the plan's own NA layout (stacked /
+    bucketed / per-relation padded / instance tables), and pads the result
+    to a rung of the shape ``ladder`` so the jitted executor never
+    recompiles past warmup.
+
+    ``fanout``    per-hop neighbor cap (per metapath / relation); the
+                  effective padded width is ``min(fanout, cfg.max_degree)``
+                  (``cfg.max_instances`` for MAGNN) and is shape-static.
+    ``ladder``    tuple of ``(t_cap, f_cap)`` rungs, small→large: ``t_cap``
+                  bounds the targets per batch (engine-side chunking),
+                  ``f_cap`` the per-type local vertex tables (clamped to
+                  the type's population at sample time).  A batch is padded
+                  to the smallest rung that fits; overflow truncates the
+                  frontier (farthest-first, counted), never the targets.
+    ``seed``      sampler RNG seed — kept equal to ``cfg.seed`` so the
+                  sampler's precomputed tables replay ``prepare()``'s exact
+                  RNG stream (full fan-out ⇒ bit-exact vs full graph).
+    """
+
+    fanout: int
+    ladder: Tuple[Tuple[int, int], ...]
+    seed: int = 0
+
+
+def default_sample_ladder(
+    fanout: int, width: int, hops: int = 1,
+    t_rungs: Tuple[int, ...] = (8, 32, 128),
+) -> Tuple[Tuple[int, int], ...]:
+    """Small automatic ``(t_cap, f_cap)`` ladder for a :class:`SampleSpec`.
+
+    ``width`` is the model's nominal per-target per-hop frontier width
+    (metapaths × padded degree for HAN, relations × degree for RGCN, ...);
+    ``hops`` the expansion depth.  The ``f_cap`` sizing is a heuristic —
+    the sampler clamps it to each type's population and truncates (counted)
+    on overflow — while the *rung count* is what matters: one jit
+    compilation per rung at warmup, zero after.
+    """
+    return tuple((t, t * (1 + max(width, 1) * max(hops, 1)))
+                 for t in t_rungs)
+
+
+@dataclass(frozen=True)
 class LayerPlan:
     """One FP→NA→SA round of an L-layer stack.
 
@@ -177,6 +226,8 @@ class StagePlan:
     param_specs: Tuple[ShardRule, ...] = (("fp", 2, (None, MODEL)),)
     # Graph-partitioned execution mode (None = single-table execution).
     partition: Optional[PartitionSpec] = None
+    # Request-path sampled-minibatch mode (None = full-graph batches only).
+    sample: Optional[SampleSpec] = None
 
     def __post_init__(self):
         if not self.layers:

@@ -25,22 +25,37 @@ def init_semantic_attention(rng: jax.Array, d_in: int, d_hidden: int) -> Dict[st
     }
 
 
-def semantic_attention(p: Dict[str, jax.Array], z: jax.Array) -> jax.Array:
+def semantic_attention(
+    p: Dict[str, jax.Array], z: jax.Array, mask: jax.Array = None
+) -> jax.Array:
     """HAN-style semantic attention. ``z``: [P, N, D] -> [N, D].
 
     DM-Type (z @ W), EW-Type (tanh, mul, reduce) — exactly the kernel mix the
     paper reports for SA.
+
+    ``mask`` ([N], optional): row validity for sampled minibatches — the
+    per-metapath score mean runs over the real (target + frontier) rows
+    only, so rung padding never shifts the semantic weights.  With an
+    all-ones mask the masked mean is bitwise the plain ``mean(axis=1)``
+    (x·1.0 is exact, same reduction order, same divisor), which is what the
+    full-fan-out parity rows rely on.
     """
     s = jnp.tanh(z @ p["W"] + p["b"])  # [P, N, H]   DM + EW
-    w = jnp.einsum("pnh,h->pn", s, p["q"]).mean(axis=1)  # [P]  Reduce
+    sc = jnp.einsum("pnh,h->pn", s, p["q"])  # [P, N]
+    if mask is None:
+        w = sc.mean(axis=1)  # [P]  Reduce
+    else:
+        w = (sc * mask[None, :]).sum(axis=1) / jnp.maximum(mask.sum(), 1.0)
     beta = jax.nn.softmax(w)  # [P]
     return jnp.einsum("p,pnd->nd", beta, z)  # weighted Reduce
 
 
-def semantic_attention_list(p: Dict[str, jax.Array], z_list: List[jax.Array]) -> jax.Array:
+def semantic_attention_list(
+    p: Dict[str, jax.Array], z_list: List[jax.Array], mask: jax.Array = None
+) -> jax.Array:
     """Baseline SA: explicit stack (DR-Type concat) then attention."""
     z = jnp.stack(z_list, axis=0)  # DR-Type: CatArrayBatchedCopy analogue
-    return semantic_attention(p, z)
+    return semantic_attention(p, z, mask)
 
 
 def semantic_attention_partitioned(

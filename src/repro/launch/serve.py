@@ -120,6 +120,59 @@ def build_hgnn_infer(cfg: HGNNConfig, hg, mesh: Optional[Mesh] = None,
     return BuiltHGNNInfer(jax.jit(fn), params, batch, plan, model.executor)
 
 
+def run_hgnn_serve(args, cfg: HGNNConfig, hg, built: BuiltHGNNInfer) -> None:
+    """Request-path serving: neighbor-sampled minibatches through the
+    slot-based continuous-batching engine (``--fanout >= 1``)."""
+    from repro.serve.engine import HGNNRequest, HGNNServeEngine
+    from repro.serve.sampler import HGNNSampler
+
+    sampler = HGNNSampler(built.plan, cfg, hg)
+    engine = HGNNServeEngine(built.executor, built.params, sampler,
+                             slots=args.slots,
+                             slot_targets=args.slot_targets, fn=built.fn)
+    n_t = hg.node_counts[built.plan.target]
+    rng = np.random.default_rng(0)
+    reqs = [
+        HGNNRequest(targets=rng.integers(
+            0, n_t, size=int(rng.integers(1, 2 * args.slot_targets + 1))))
+        for _ in range(args.requests)
+    ]
+    n_targets = sum(len(r.targets) for r in reqs)
+    t0 = time.time()
+    engine.warmup()
+    warm = time.time() - t0
+    t0 = time.time()
+    engine.serve(reqs)
+    dt = time.time() - t0
+    st = engine.stats()
+    part = built.plan.partition
+    rungs = ";".join(f"{i}:{n}" for i, n in st["rung_hits"].items())
+    print(f"serve {cfg.model}/{cfg.dataset}"
+          f"{f' +partitions={part.k}' if part is not None else ''} "
+          f"requests={len(reqs)} targets={n_targets} slots={args.slots} "
+          f"slot_targets={args.slot_targets} fanout={cfg.fanout} "
+          f"steps={st['steps']} recompiles={st['compiles_after_warmup']} "
+          f"frontier_bytes={st['frontier_bytes']:.0f} "
+          f"truncated={st['truncated_rows']} rung_hits={rungs} "
+          f"warmup_ms={warm*1e3:.2f} wall_ms={dt*1e3:.2f} "
+          f"step_ms={st['wall_mean_ms']:.3f}")
+    if args.characterize:
+        sb = engine.last_sb
+        recs = built.executor.stage_records(built.params, sb.batch,
+                                            sample_meta=sb.meta)
+        sm = recs["stages"]["SAMPLE"]
+        print(f"  SAMPLE: rung={sm['rung']} n_targets={sm['n_targets']} "
+              f"frontier_rows={sm['frontier_rows']} "
+              f"frontier_bytes={sm['frontier_bytes']:.3g} "
+              f"index_bytes={sm['index_bytes']:.3g}")
+        for stage, rec in recs["stages"].items():
+            if stage == "SAMPLE":
+                continue
+            print(f"  {stage}: flops={rec['flops']:.3g} "
+                  f"hbm_bytes={rec['hbm_bytes']:.3g} "
+                  f"bound={rec['roofline']['bound']}")
+
+
 def run_hgnn(args) -> None:
     from repro.data.synthetic import make_dataset
     from repro.launch.mesh import make_smoke_mesh
@@ -133,12 +186,20 @@ def run_hgnn(args) -> None:
                      degree_buckets=args.degree_buckets,
                      fuse_na_sa=args.fuse_na_sa,
                      partitions=args.partitions,
-                     layers=args.layers)
+                     layers=args.layers,
+                     fanout=args.fanout)
     hg = make_dataset(args.dataset)
     mesh = None
     if args.mesh_data * args.mesh_model > 1:
+        if args.fanout >= 1:
+            raise SystemExit("--fanout serving runs single-device or "
+                             "graph-partitioned (--partitions); it does not "
+                             "combine with a --mesh-data/--mesh-model mesh")
         mesh = make_smoke_mesh(data=args.mesh_data, model=args.mesh_model)
     built = build_hgnn_infer(cfg, hg, mesh)
+    if args.fanout >= 1:
+        run_hgnn_serve(args, cfg, hg, built)
+        return
     engine = HGNNInferEngine(built.executor, built.params, built.batch,
                              fn=built.fn)
     logits = jax.block_until_ready(engine.infer())
@@ -207,6 +268,14 @@ def main() -> None:
                          "params; the graph-side index tables are built once "
                          "and reused; partitioned runs re-exchange updated "
                          "halo features every layer)")
+    ap.add_argument("--fanout", type=int, default=0,
+                    help=">=1: request-path serving — neighbor-sampled "
+                         "minibatch inference (per-hop fan-out cap) through "
+                         "the slot-based continuous-batching engine; "
+                         "--requests/--slots/--slot-targets size the queue")
+    ap.add_argument("--slot-targets", type=int, default=4,
+                    help="target vertices each slot contributes per serving "
+                         "step (HGNN serving mode)")
     ap.add_argument("--fuse-na-sa", action="store_true",
                     help="fused NA→SA epilogue: SA pass-1 scores accumulate "
                          "inside the NA kernel (stacked layout)")

@@ -552,6 +552,106 @@ def test_semantic_scores_streaming_parity(n, block_n):
                                rtol=2e-5, atol=2e-5)
 
 
+# ---------------------------------------------------------------------------
+# request-path sampling: sampled-vs-full parity
+# ---------------------------------------------------------------------------
+
+SAMPLED_MATRIX = [
+    # with fanout >= max degree and an exact-size rung, a sampled minibatch
+    # over ALL targets must reproduce the full-graph forward bit-for-bit
+    ("han", {"fused": True}),
+    ("han", {"fused": True, "layers": 2}),
+    ("han", {"fused": True, "fuse_na_sa": True}),
+    ("han", {"fused": True, "degree_buckets": 3}),
+    ("han", {"fused": True, "degree_buckets": 3, "layers": 2}),
+    ("rgcn", {"fused": True}),
+    ("rgcn", {"fused": True, "layers": 2}),
+    ("rgcn", {"fused": True, "degree_buckets": 3}),
+    ("magnn", {}),
+    ("magnn", {"layers": 2}),
+]
+
+
+@pytest.mark.parametrize(
+    "model,kw", SAMPLED_MATRIX,
+    ids=[f"{m}-{'_'.join(f'{k}{v}' for k, v in kw.items()) or 'base'}"
+         for m, kw in SAMPLED_MATRIX])
+def test_sampled_minibatch_matches_full_forward(tiny_hg, model, kw):
+    """The acceptance row: fan-out >= max degree + an exact-size ladder rung
+    means sampling drops nothing, so the sampled minibatch logits over all
+    40 targets are BIT-EXACT vs the full-graph forward — per executor
+    dispatch arm (stacked, bucketed, fused-epilogue, padded-relational,
+    instances) at L in {1, 2}."""
+    from repro.serve.sampler import HGNNSampler
+
+    cfg = _cfg(model, fanout=64, sample_ladder=((40, 40),), **kw)
+    m = get_model(cfg)
+    batch = m.prepare(tiny_hg)
+    params = m.init(jax.random.key(0), batch)
+    fn = jax.jit(m.forward)  # the executable serving actually runs
+    want = np.asarray(fn(params, batch))
+    sampler = HGNNSampler(m.plan(), cfg, tiny_hg)
+    sb = sampler.sample(np.arange(40))
+    got = np.asarray(fn(params, sb.batch))[sb.target_rows]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sampled_gcn_matches_full_forward():
+    from repro.data.synthetic import make_reddit_like
+    from repro.serve.sampler import HGNNSampler
+
+    hg = make_reddit_like(scale=0.005)
+    n = hg.node_counts["N"]
+    cfg = HGNNConfig(model="gcn", dataset="reddit", hidden=16, n_classes=5,
+                     fanout=4096, sample_ladder=((n, n),))
+    m = get_model(cfg)
+    batch = m.prepare(hg)
+    params = m.init(jax.random.key(0), batch)
+    fn = jax.jit(m.forward)
+    want = np.asarray(fn(params, batch))
+    sampler = HGNNSampler(m.plan(), cfg, hg)
+    sb = sampler.sample(np.arange(n))
+    got = np.asarray(fn(params, sb.batch))[sb.target_rows]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sampler_rejects_csr_plans(tiny_hg):
+    from repro.serve.sampler import HGNNSampler
+
+    cfg = _cfg("han", fused=False, fanout=4)
+    m = get_model(cfg)
+    with pytest.raises(ValueError, match="csr"):
+        HGNNSampler(m.plan(), cfg, tiny_hg)
+    cfg = _cfg("han", fused=True)  # fanout=0: no SampleSpec on the plan
+    m = get_model(cfg)
+    with pytest.raises(ValueError, match="SampleSpec"):
+        HGNNSampler(m.plan(), cfg, tiny_hg)
+
+
+def test_sample_stage_record_rides_stage_records(tiny_hg):
+    """stage_records grows a SAMPLE stage from the sampler's meta: the
+    sampled-frontier bytes are the Subgraph-Build traffic of the request
+    path, and the compiled-stage totals stay additive without it."""
+    from repro.serve.sampler import HGNNSampler
+
+    cfg = _cfg("han", fused=True, fanout=4)
+    m = get_model(cfg)
+    batch = m.prepare(tiny_hg)
+    params = m.init(jax.random.key(0), batch)
+    sampler = HGNNSampler(m.plan(), cfg, tiny_hg)
+    sb = sampler.sample(np.arange(10))
+    recs = m.executor.stage_records(params, sb.batch, sample_meta=sb.meta)
+    assert "SAMPLE" in recs["stages"]
+    sm = recs["stages"]["SAMPLE"]
+    assert sm["n_targets"] == 10 and sm["fanout"] == 4
+    assert sm["frontier_bytes"] > 0 and sm["index_bytes"] > 0
+    assert tuple(sm["rung"]) in m.plan().sample.ladder
+    # SAMPLE is host-side traffic: the FLOPs/bytes totals still reconcile
+    # over the compiled stages only
+    assert recs["total"]["flops"] == pytest.approx(
+        sum(r["flops"] for n, r in recs["stages"].items() if n != "SAMPLE"))
+
+
 def test_hgnn_infer_engine_serves_and_characterizes(tiny_hg):
     from repro.launch.serve import build_hgnn_infer
     from repro.serve.engine import HGNNInferEngine
