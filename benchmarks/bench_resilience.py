@@ -1,0 +1,128 @@
+"""Serving resilience under a seeded chaos schedule (repro.serve.faults).
+
+Per case (model/dataset) the slot engine serves a fixed deterministic
+request queue while a seeded :class:`FaultInjector` drives the full
+resilience surface: transient + persistent sampler exceptions, one forward
+exception, an injected-latency burst that breaches the SLO (degradation
+runs on ``slo_signal="injected"`` so the pressure trajectory — and every
+degrade/recover counter — is host-independent), and a bounded queue that
+sheds the overflow.  A second, partitioned case loses a partition mid-serve
+and records whether the failover output stayed bit-exact vs a never-failed
+run.
+
+Rows record the mean per-step wall (us, recorded for the handbook but NOT
+gated) plus the deterministic resilience counters ``run.py --check`` gates
+EXACTLY: same seed, same queue, same schedule, same counters — any drift is
+a behavior change in the recovery path, not noise.
+
+Rows fold into ``BENCH_hgnn.json`` under ``resilience``.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import HGNNConfig
+from repro.core.characterize import resilience_record
+from repro.core.models import get_model
+from repro.data.synthetic import make_dataset
+from repro.serve.engine import HGNNRequest, HGNNServeEngine
+from repro.serve.faults import Fault, FaultInjector
+from repro.serve.resilience import ResilienceConfig
+from repro.serve.sampler import HGNNSampler
+
+CASES = [("han", "imdb"), ("rgcn", "imdb")]
+N_REQUESTS = 32
+FANOUT = 8
+FAILOVER_CASES = [("han", "imdb")]
+if os.environ.get("BENCH_SMOKE"):  # CI smoke: one chaos case + the failover
+    CASES = [("han", "imdb")]
+
+
+def _build(model: str, ds: str, partitions: int = 0):
+    import jax
+
+    hg = make_dataset(ds)
+    cfg = HGNNConfig(model=model, dataset=ds, hidden=64, n_heads=8,
+                     n_classes=8, max_degree=32, fused=True, fanout=FANOUT,
+                     partitions=partitions)
+    m = get_model(cfg)
+    batch = m.prepare(hg)
+    params = m.init(jax.random.key(0), batch)
+    fn = jax.jit(m.executor.forward)
+    sampler = HGNNSampler(m.plan(), cfg, hg)
+    n_t = hg.node_counts[m.plan().target]
+    return m, params, fn, sampler, n_t
+
+
+def _requests(n_t: int) -> list:
+    # draw from a small id pool so duplicate target ids occur and the
+    # admission dedup counter exercises deterministically
+    rng = np.random.default_rng(0)
+    pool = min(n_t, 48)
+    return [HGNNRequest(targets=rng.integers(
+        0, pool, size=int(rng.integers(1, 9)))) for _ in range(N_REQUESTS)]
+
+
+def _counters(st: dict) -> str:
+    rec = resilience_record(st)
+    keys = ("ok_requests", "partial_requests", "failed_requests", "rejected",
+            "shed", "deduped_rows", "retries", "failed_steps",
+            "deadline_expired", "degrade_transitions", "recover_transitions",
+            "max_degrade_level", "partition_failovers")
+    kv = " ".join(f"{k}={rec[k]}" for k in keys)
+    return (f"requests={N_REQUESTS} steps={rec['steps']} "
+            f"recompiles={rec['recompiles']} {kv}")
+
+
+def run() -> list:
+    rows: list = []
+    for model, ds in CASES:
+        m, params, fn, sampler, n_t = _build(model, ds)
+        inj = FaultInjector.seeded(0, n_steps=16, sampler=2, forward=1,
+                                   persistent_sampler=1, latency_steps=4,
+                                   latency_s=0.2)
+        res = ResilienceConfig(max_queue=24, deadline_ms=60_000.0,
+                               slo_ms=50.0, slo_signal="injected",
+                               degrade_patience=1, recover_patience=2)
+        eng = HGNNServeEngine(m.executor, params, sampler, slots=4,
+                              slot_targets=2, fn=fn, resilience_cfg=res,
+                              injector=inj)
+        eng.warmup()
+        eng.serve(_requests(n_t))
+        st = eng.stats()
+        rows.append((f"resilience/{model}/{ds}/chaos",
+                     st["wall_mean_ms"] * 1e3, _counters(st)))
+    for model, ds in FAILOVER_CASES:
+        # partitioned arm: lose partition 0 at step 3, serve to completion,
+        # and verify per-request logits vs a never-failed partitioned run
+        outs = []
+        for inj in (FaultInjector([Fault(step=3, kind="partition",
+                                         partition=0)]), None):
+            m, params, fn, sampler, n_t = _build(model, ds, partitions=3)
+            eng = HGNNServeEngine(m.executor, params, sampler, slots=8,
+                                  slot_targets=4, fn=fn, injector=inj)
+            eng.warmup()
+            reqs = _requests(n_t)
+            eng.serve(reqs)
+            outs.append((eng, eng.stats(), reqs))
+        eng, st, reqs = outs[0]
+        bitexact = int(all(
+            np.array_equal(a.logits, b.logits)
+            for a, b in zip(reqs, outs[1][2])))
+        rs = st["resilience"]
+        rows.append((
+            f"resilience/{model}/{ds}/failover",
+            st["wall_mean_ms"] * 1e3,
+            f"requests={N_REQUESTS} steps={st['steps']} "
+            f"ok_requests={rs['ok_requests']} "
+            f"partition_failovers={rs['partition_failovers']} "
+            f"surviving_k={eng._serve_plan.partition.k} "
+            f"bitexact={bitexact}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

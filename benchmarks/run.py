@@ -9,8 +9,9 @@ future PRs diff against (per-stage wall + characterization breakdown,
 fused-vs-baseline and bucketed-vs-CSR NA speedups + launch counts, the
 fused NA→SA epilogue's saved-HBM-pass snapshot, the partitioned
 halo-traffic sweep, the L-layer depth sweep with per-layer stage records +
-halo-bytes × L, and the request-path serving sweep with its sampled
-frontier traffic + ladder hit counts).
+halo-bytes × L, the request-path serving sweep with its sampled frontier
+traffic + ladder hit counts, and the seeded chaos sweep with its
+retry/degrade/shed/failover counters).
 
 ``--check`` turns the run into a regression gate: before the new snapshot is
 written, every fresh stage cost (FP/NA/SA and, for partitioned runs, the
@@ -43,6 +44,7 @@ MODULES = [
     "bench_partition",           # partitioned execution: cut vs halo vs NA
     "bench_layers",              # L-layer depth sweep: stage mix + halo x L
     "bench_serving",             # request-path slot serving: sampled minibatch
+    "bench_resilience",          # seeded chaos: retries/degrade/shed/failover
     "bench_lm_roofline",         # 40-cell arch x shape roofline table
 ]
 
@@ -148,6 +150,26 @@ def parse_serving(rows) -> dict:
     return out
 
 
+def parse_resilience(rows) -> dict:
+    """``resilience/<model>/<ds>/<scenario>`` rows -> {case: record}.
+
+    ``step_us`` is the latency wall (recorded, never gated); every other
+    field is a deterministic counter from a seeded fault schedule — the
+    gate compares them EXACTLY (same seed + same queue must replay the same
+    recovery trajectory)."""
+    out: dict = {}
+    for name, us, derived in rows or []:
+        m = re.fullmatch(r"resilience/(\w+)/(\w+)/(\w+)", name)
+        if not m:
+            continue
+        d = dict(kv.split("=", 1) for kv in derived.split())
+        rec: dict = {"step_us": round(us, 1)}
+        for k, v in d.items():
+            rec[k] = int(v)
+        out[f"{m.group(1)}/{m.group(2)}/{m.group(3)}"] = rec
+    return out
+
+
 def check_regression(results: dict, threshold: float = 0.20) -> None:
     """Bench-regression gate: diff the fresh NA/SA stage costs against the
     committed ``BENCH_hgnn.json``; fail on >``threshold`` regression.
@@ -169,7 +191,9 @@ def check_regression(results: dict, threshold: float = 0.20) -> None:
     pt = results.get("bench_partition")
     ly = results.get("bench_layers")
     sv = results.get("bench_serving")
-    if (not sb and not pt and not ly and not sv) or not BENCH_JSON.exists():
+    rz = results.get("bench_resilience")
+    if (not sb and not pt and not ly and not sv and not rz) \
+            or not BENCH_JSON.exists():
         return
     try:
         committed = json.loads(BENCH_JSON.read_text())
@@ -330,6 +354,30 @@ def check_regression(results: dict, threshold: float = 0.20) -> None:
                     regressions.append(
                         f"serving/{case} rung_hits[{rung}]: {n_prev} -> "
                         f"{n_new} (ladder dispatch drift)")
+    if rz:
+        # resilience gate: counters replay a seeded fault schedule over a
+        # fixed queue, so the comparison is EXACT equality — any drift in
+        # retries / failed requests / shed / degrade levels / failover
+        # outcome is a recovery-path behavior change, not noise.  Walls
+        # (step_us) stay ungated as everywhere else.
+        old_rz = committed.get("resilience", {})
+        fresh_rz = parse_resilience(rz)
+        if not fresh_rz and old_rz:
+            regressions.append("bench_resilience rows parsed to zero cases "
+                               "(row naming / gate regex drift?)")
+        for case, rec in fresh_rz.items():
+            prev = old_rz.get(case)
+            if not prev:
+                continue
+            for key in sorted(set(prev) - {"step_us"}):
+                if key not in rec:
+                    regressions.append(
+                        f"resilience/{case} {key}: recorded counter missing "
+                        "from the fresh run")
+                elif rec[key] != prev[key]:
+                    regressions.append(
+                        f"resilience/{case} {key}: {prev[key]} -> {rec[key]} "
+                        "(seeded chaos counters must replay exactly)")
     if regressions:
         raise SystemExit("bench regression gate (>"
                          f"{int(threshold * 100)}% vs {BENCH_JSON.name}): "
@@ -416,7 +464,12 @@ def write_bench_json(results: dict) -> None:
         # merge per case so a BENCH_SMOKE run (one case, one slot plan)
         # never shrinks the committed serving sweep
         data.setdefault("serving", {}).update(parse_serving(sv))
-    if sb or nf or se or pt or ly or sv:
+    rz = results.get("bench_resilience")
+    if rz:
+        # merge per case so a BENCH_SMOKE run (one chaos case + failover)
+        # never shrinks the committed chaos sweep
+        data.setdefault("resilience", {}).update(parse_resilience(rz))
+    if sb or nf or se or pt or ly or sv or rz:
         BENCH_JSON.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
         print(f"# wrote {BENCH_JSON.name}", flush=True)
 

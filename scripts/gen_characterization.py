@@ -329,6 +329,46 @@ def _serving(data: dict) -> list:
     return out
 
 
+def _resilience(data: dict) -> list:
+    rz = data.get("resilience")
+    if not rz:
+        return []
+    out = [
+        "",
+        "## Serving resilience: seeded chaos counters "
+        "(`repro.serve.resilience`)",
+        "",
+        "Beyond-paper: the same slot engine serves a fixed queue while a "
+        "seeded `FaultInjector` (`repro.serve.faults`) drives transient + "
+        "persistent exceptions, an injected-latency SLO breach (degradation "
+        "shrinks per-slot chunks and clamps the rung choice *inside* the "
+        "warmed ladder — recompiles stay 0 under pressure), a bounded "
+        "queue that sheds overflow, and — partitioned arm — a partition "
+        "loss whose failover re-partitions over the survivors "
+        "(`benchmarks/bench_resilience.py`).  Every counter replays the "
+        "seeded schedule exactly and is gated by `benchmarks/run.py "
+        "--check` at exact equality; walls are recorded but never gated.",
+        "",
+        "| case | steps | ok | failed | shed | retries | degrade/recover | "
+        "max level | failovers | bit-exact | step wall |",
+        "| --- | --- | --- | --- | --- | --- | --- | --- | --- | --- | "
+        "--- |",
+    ]
+    for case in sorted(rz):
+        r = rz[case]
+        deg = (f"{r['degrade_transitions']}/{r['recover_transitions']}"
+               if "degrade_transitions" in r else "—")
+        out.append(
+            f"| {case} | {r.get('steps', 0)} | {r.get('ok_requests', 0)} | "
+            f"{r.get('failed_requests', '—')} | {r.get('shed', '—')} | "
+            f"{r.get('retries', '—')} | {deg} | "
+            f"{r.get('max_degrade_level', '—')} | "
+            f"{r.get('partition_failovers', 0)} | "
+            f"{'yes' if r.get('bitexact') else '—'} | "
+            f"{_us(r['step_us']) if 'step_us' in r else '—'} |")
+    return out
+
+
 def render(data: dict) -> str:
     lines = [HEADER]
     lines += _stage_breakdown(data)
@@ -338,16 +378,17 @@ def render(data: dict) -> str:
     lines += _partition(data)
     lines += _layers(data)
     lines += _serving(data)
+    lines += _resilience(data)
     lines += [
         "",
         "## Regenerating",
         "",
         "```bash",
         "# refresh the snapshot (stage breakdown + NA/SA fusion + partition",
-        "# + depth sweep + request-path serving)",
+        "# + depth sweep + request-path serving + chaos counters)",
         "PYTHONPATH=src:. python benchmarks/run.py bench_stage_breakdown \\",
         "    bench_na_fused bench_sa_epilogue bench_partition bench_layers \\",
-        "    bench_serving",
+        "    bench_serving bench_resilience",
         "# re-render this page",
         "python scripts/gen_characterization.py",
         "```",

@@ -440,6 +440,39 @@ def sample_traffic(meta: Dict) -> Dict:
     }
 
 
+def resilience_record(stats: Dict) -> Dict:
+    """Resilience counters record for request-path serving.
+
+    ``stats`` is :meth:`repro.serve.engine.HGNNServeEngine.stats`'s return
+    value.  Normalizes the nested resilience counters into the flat
+    deterministic record the chaos bench and the characterization handbook
+    report: per-status request counts, retry/failure totals, the
+    degradation trajectory (transitions + peak level — both strictly inside
+    the warmed ladder, so ``recompiles`` belongs in the same record), and
+    the partition-failover outcome.  Every field replays a seeded fault
+    schedule exactly; none is timing-dependent.
+    """
+    rs = stats.get("resilience", {})
+    return {
+        "ok_requests": int(rs.get("ok_requests", 0)),
+        "partial_requests": int(rs.get("partial_requests", 0)),
+        "failed_requests": int(rs.get("failed_requests", 0)),
+        "rejected": int(rs.get("rejected", 0)),
+        "shed": int(rs.get("shed", 0)),
+        "deduped_rows": int(rs.get("deduped_rows", 0)),
+        "retries": int(rs.get("retries", 0)),
+        "failed_steps": int(rs.get("failed_steps", 0)),
+        "deadline_expired": int(rs.get("deadline_expired", 0)),
+        "degrade_transitions": int(rs.get("degrade_transitions", 0)),
+        "recover_transitions": int(rs.get("recover_transitions", 0)),
+        "max_degrade_level": int(rs.get("max_degrade_level", 0)),
+        "partition_failovers": int(rs.get("partition_failovers", 0)),
+        "lost_partitions": list(rs.get("lost_partitions", [])),
+        "steps": int(stats.get("steps", 0)),
+        "recompiles": stats.get("compiles_after_warmup"),
+    }
+
+
 # ---------------------------------------------------------------------------
 # model-level analytics + roofline
 # ---------------------------------------------------------------------------

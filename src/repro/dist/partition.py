@@ -566,3 +566,34 @@ def _partition_instances(plan, batch: Dict, k: int) -> Dict:
         "n_nodes": batch["n_nodes"],
         "part": part,
     }
+
+
+# ---------------------------------------------------------------------------
+# partition failover (serving resilience)
+# ---------------------------------------------------------------------------
+
+
+def surviving_partition_spec(spec, failed: Sequence[int]):
+    """Surviving-topology rebuild on the graph-partition axis.
+
+    The ``train/elastic.surviving_mesh`` idea applied to partitioned
+    serving: when a partition (its host/device arm) is lost mid-serve, the
+    next sampled batch is simply re-partitioned over the survivors — the
+    partitioner re-assigns every vertex (including the lost partition's)
+    across ``k - len(failed)`` partitions from scratch, because assignment,
+    halo maps and relabeling are all pure functions of (batch, k).  The
+    partitioned head's inverse permutation restores global row order
+    whatever the assignment, so post-failover logits stay bit-exact vs a
+    never-failed run (the K-parity invariant from the partition tests).
+    """
+    from dataclasses import replace
+
+    lost = {int(f) for f in failed}
+    bad = [f for f in lost if not 0 <= f < spec.k]
+    if bad:
+        raise ValueError(f"failed partition ids {sorted(bad)} out of range "
+                         f"for k={spec.k}")
+    keep = spec.k - len(lost)
+    if keep < 1:
+        raise RuntimeError("no surviving partitions")
+    return replace(spec, k=keep)

@@ -120,16 +120,42 @@ def build_hgnn_infer(cfg: HGNNConfig, hg, mesh: Optional[Mesh] = None,
     return BuiltHGNNInfer(jax.jit(fn), params, batch, plan, model.executor)
 
 
+def build_fault_injector(args, part) -> Any:
+    """``--inject-faults SEED`` -> the chaos-smoke schedule: two transient
+    sampler faults + one transient forward fault (absorbed by retries), one
+    persistent sampler fault (fails the step's requests), injected latency
+    on three steps (drives the degradation ladder when --slo-ms is set),
+    and — partitioned runs only — one partition loss at step 3 (failover
+    re-partitions over the survivors).  Deterministic per seed."""
+    from repro.serve.faults import FaultInjector
+
+    return FaultInjector.seeded(
+        seed=args.inject_faults, n_steps=max(args.requests, 8),
+        sampler=2, forward=1, persistent_sampler=1, latency_steps=3,
+        latency_s=(args.slo_ms or 50.0) / 250.0,
+        partition_loss_step=3 if part is not None and part.k > 1 else None,
+        partition=0)
+
+
 def run_hgnn_serve(args, cfg: HGNNConfig, hg, built: BuiltHGNNInfer) -> None:
     """Request-path serving: neighbor-sampled minibatches through the
     slot-based continuous-batching engine (``--fanout >= 1``)."""
     from repro.serve.engine import HGNNRequest, HGNNServeEngine
+    from repro.serve.resilience import ResilienceConfig
     from repro.serve.sampler import HGNNSampler
 
     sampler = HGNNSampler(built.plan, cfg, hg)
+    part = built.plan.partition
+    res = ResilienceConfig(max_queue=args.max_queue,
+                           deadline_ms=args.deadline_ms,
+                           slo_ms=args.slo_ms,
+                           slo_signal=args.slo_signal)
+    injector = (build_fault_injector(args, part)
+                if args.inject_faults is not None else None)
     engine = HGNNServeEngine(built.executor, built.params, sampler,
                              slots=args.slots,
-                             slot_targets=args.slot_targets, fn=built.fn)
+                             slot_targets=args.slot_targets, fn=built.fn,
+                             resilience_cfg=res, injector=injector)
     n_t = hg.node_counts[built.plan.target]
     rng = np.random.default_rng(0)
     reqs = [
@@ -145,7 +171,6 @@ def run_hgnn_serve(args, cfg: HGNNConfig, hg, built: BuiltHGNNInfer) -> None:
     engine.serve(reqs)
     dt = time.time() - t0
     st = engine.stats()
-    part = built.plan.partition
     rungs = ";".join(f"{i}:{n}" for i, n in st["rung_hits"].items())
     print(f"serve {cfg.model}/{cfg.dataset}"
           f"{f' +partitions={part.k}' if part is not None else ''} "
@@ -156,6 +181,15 @@ def run_hgnn_serve(args, cfg: HGNNConfig, hg, built: BuiltHGNNInfer) -> None:
           f"truncated={st['truncated_rows']} rung_hits={rungs} "
           f"warmup_ms={warm*1e3:.2f} wall_ms={dt*1e3:.2f} "
           f"step_ms={st['wall_mean_ms']:.3f}")
+    rs = st["resilience"]
+    print(f"  resilience: ok={rs['ok_requests']} "
+          f"partial={rs['partial_requests']} failed={rs['failed_requests']} "
+          f"rejected={rs['rejected']} shed={rs['shed']} "
+          f"retries={rs['retries']} failed_steps={rs['failed_steps']} "
+          f"deadline_expired={rs['deadline_expired']} "
+          f"degrade_steps={rs['degrade_steps']} "
+          f"max_degrade_level={rs['max_degrade_level']} "
+          f"failovers={rs['partition_failovers']}")
     if args.characterize:
         sb = engine.last_sb
         recs = built.executor.stage_records(built.params, sb.batch,
@@ -276,6 +310,29 @@ def main() -> None:
     ap.add_argument("--slot-targets", type=int, default=4,
                     help="target vertices each slot contributes per serving "
                          "step (HGNN serving mode)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline: expired requests complete "
+                         "PARTIAL with the rows served so far (HGNN serving "
+                         "resilience)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-step SLO target: walls breaching it drive the "
+                         "degradation ladder (smaller chunks + smaller "
+                         "warmed rungs; restores when pressure drops)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission bound: requests beyond this queue depth "
+                         "are shed (status REJECTED) instead of growing the "
+                         "backlog")
+    ap.add_argument("--inject-faults", type=int, default=None,
+                    help="seed a deterministic fault schedule (transient + "
+                         "persistent sampler/forward faults, injected "
+                         "latency, partition loss) through the serve loop — "
+                         "the chaos-smoke harness")
+    ap.add_argument("--slo-signal", choices=("observed", "injected"),
+                    default="observed",
+                    help="wall feeding the SLO comparison: 'observed' = real "
+                         "step wall + injected latency (production); "
+                         "'injected' = the fault schedule's latency alone — "
+                         "replay-deterministic degradation for chaos smokes")
     ap.add_argument("--fuse-na-sa", action="store_true",
                     help="fused NA→SA epilogue: SA pass-1 scores accumulate "
                          "inside the NA kernel (stacked layout)")

@@ -23,6 +23,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.nn import transformer as tf
+from repro.serve import resilience
+from repro.serve.resilience import (
+    FAILED, OK, PARTIAL, AdmissionController, DegradationController,
+    ResilienceConfig, RetryPolicy, StepFailure, finalize_request)
 
 
 class HGNNInferEngine:
@@ -58,15 +62,30 @@ class HGNNInferEngine:
 @dataclasses.dataclass
 class HGNNRequest:
     """One HGNN inference request: classify ``targets`` (global target-type
-    vertex ids).  ``logits`` fills in request order as the engine's slot
-    steps complete chunks of the request."""
-    targets: np.ndarray  # [n] int64, global ids of the plan's target type
-    logits: Optional[np.ndarray] = None  # [n, n_classes] once served
-    _done: int = 0  # host cursor: rows < _done are already scattered
+    vertex ids).
+
+    ``serve`` leaves every request in a terminal ``status``
+    (``OK`` / ``PARTIAL`` / ``REJECTED`` / ``FAILED`` — see
+    ``repro.serve.resilience``) with ``logits`` rows for exactly the target
+    ids named by ``served`` (all of ``targets`` when ``OK``; the rows
+    completed before the deadline/failure otherwise; always ``n_classes``
+    wide, so downstream concatenation over mixed-status requests is
+    well-formed).  ``deadline_ms`` overrides the engine-wide default."""
+    targets: np.ndarray  # [n] integer, global ids of the plan's target type
+    logits: Optional[np.ndarray] = None  # [n_served, n_classes] when done
+    deadline_ms: Optional[float] = None  # per-request deadline override
+    status: str = "NEW"
+    error: Optional[str] = None          # reject/failure reason
+    served: Optional[np.ndarray] = None  # target ids the logits rows answer
+    _done: int = 0  # host cursor into _serve_ids: rows < _done are served
+    _serve_ids: Optional[np.ndarray] = None  # admission's deduped id view
+    _inv: Optional[np.ndarray] = None        # original row -> _serve_ids row
+    _buf: Optional[np.ndarray] = None        # [len(_serve_ids), C] working
+    _deadline: Optional[float] = None        # absolute perf_counter deadline
 
     @property
     def finished(self) -> bool:
-        return self.logits is not None and self._done >= len(self.targets)
+        return self.status in resilience.TERMINAL
 
 
 class HGNNServeEngine:
@@ -87,10 +106,22 @@ class HGNNServeEngine:
     sampled batch each step (host relabeling chooses data-dependent halo
     shapes, so partitioned serving accepts recompiles — same convention as
     the partition benchmarks).
+
+    Resilience (``repro.serve.resilience`` policies, threaded through the
+    slot loop): admission control with structured per-request statuses,
+    per-request deadlines (expired requests complete ``PARTIAL`` with the
+    rows served so far), SLO-driven degradation that shrinks the per-slot
+    chunk and clamps the rung choice *inside* the warmed ladder, bounded
+    retry-with-backoff around the sampler and the jitted forward (failing
+    only the affected slots' requests on persistent errors), and — on a
+    partitioned plan — failover that re-partitions subsequent batches over
+    the surviving partitions when ``injector`` reports a partition loss.
     """
 
     def __init__(self, executor, params, sampler, slots: int = 8,
-                 slot_targets: int = 4, fn=None):
+                 slot_targets: int = 4, fn=None,
+                 resilience_cfg: Optional[ResilienceConfig] = None,
+                 injector=None):
         self.executor = executor
         self.plan = executor.plan
         self.params = params
@@ -104,15 +135,52 @@ class HGNNServeEngine:
                 f"slots*slot_targets={slots * slot_targets} exceeds the "
                 f"largest ladder rung's target cap {max_t}; widen the "
                 "ladder or shrink the slot plan")
+        self.res = (resilience_cfg if resilience_cfg is not None
+                    else ResilienceConfig())
+        self.injector = injector
+        self.n_classes = int(executor.cfg.n_classes)
+        # failover target: partition loss swaps in a survivors-only spec
+        self._serve_plan = self.plan
         self._warm_compiles: Optional[int] = None
         self.step_log: List[Dict] = []
         self.last_sb = None
+        self._fresh_policies()
+
+    def _fresh_policies(self) -> None:
+        """Per-serve policy state (counters reset each ``serve`` call)."""
+        self.admission = AdmissionController(
+            self.res, self.sampler.n_target_type, self.n_classes)
+        self.degrade = DegradationController(
+            self.res, len(self.sampler.ladder), self.slot_targets)
+        self.retry = RetryPolicy(self.res)
+        self._deadline_expired = 0
+        self._failovers = 0
+        self._lost_partitions: List[int] = []
+        self._status_counts: Dict[str, int] = {}
 
     def _forward_batch(self, batch: Dict) -> Dict:
-        if self.plan.partition is not None:
+        if self._serve_plan.partition is not None:
             from repro.dist.partition import partition_batch
-            return partition_batch(self.plan, batch)
+            return partition_batch(self._serve_plan, batch)
         return batch
+
+    def _maybe_failover(self, step: int) -> None:
+        """Injected partition loss -> re-assign the lost partition's
+        vertices over the survivors (every subsequent ``partition_batch``
+        re-partitions with the shrunk spec; the partitioned head's inverse
+        permutation keeps global row order, so outputs stay bit-exact vs a
+        never-failed run)."""
+        if self.injector is None or self._serve_plan.partition is None:
+            return
+        lost = self.injector.partition_loss(step)
+        if lost is None:
+            return
+        from repro.dist.partition import surviving_partition_spec
+        spec = surviving_partition_spec(self._serve_plan.partition, [lost])
+        self._serve_plan = dataclasses.replace(self._serve_plan,
+                                               partition=spec)
+        self._failovers += 1
+        self._lost_partitions.append(int(lost))
 
     def warmup(self) -> int:
         """Compile every ladder rung on a dummy batch; snapshot the jit
@@ -125,49 +193,125 @@ class HGNNServeEngine:
         return self._warm_compiles
 
     def serve(self, requests: List[HGNNRequest]) -> List[HGNNRequest]:
-        """Run the slot loop until every request's logits are complete."""
+        """Run the slot loop until every request reaches a terminal status.
+
+        Never raises for admissible traffic: bad requests are REJECTED at
+        admission, deadline-expired ones complete PARTIAL, and persistent
+        step errors FAIL only the requests in the affected slots.
+        """
         import collections
         import time
 
-        q = collections.deque(requests)
+        self._fresh_policies()
+        adm, deg, retry = self.admission, self.degrade, self.retry
+        now = time.perf_counter()
+        q: collections.deque = collections.deque()
+        for r in requests:
+            if adm.admit(r, len(q), now):
+                q.append(r)
         active: List[Optional[HGNNRequest]] = [None] * self.slots
         self.step_log = []
+        step = 0
         while q or any(r is not None for r in active):
-            # refill: finished slots take the next queued request
+            now = time.perf_counter()
+            # deadline expiry: active slots and queued requests complete
+            # PARTIAL (rows served so far) without blocking the loop
+            active, n_exp = resilience.expire_requests(
+                active, now, self.n_classes)
+            self._deadline_expired += n_exp
+            if q:
+                live: collections.deque = collections.deque()
+                for r in q:
+                    if r._deadline is not None and now >= r._deadline:
+                        finalize_request(r, PARTIAL, self.n_classes,
+                                         error="deadline expired")
+                        self._deadline_expired += 1
+                    else:
+                        live.append(r)
+                q = live
+            # refill: degenerate requests completed at admission, so every
+            # queued request is servable and takes exactly one free slot
             for s in range(self.slots):
-                while active[s] is None and q:
-                    r = q.popleft()
-                    if len(r.targets) == 0:  # degenerate: nothing to serve
-                        r.logits = np.zeros((0, 0), np.float32)
-                        continue
-                    active[s] = r
+                if active[s] is None and q:
+                    active[s] = q.popleft()
+                    active[s].status = "ACTIVE"
+            # degradation: per-slot chunk + rung clamp (warmed rungs only)
+            level_used = deg.level
+            chunk = deg.chunk()
+            rung_limit = deg.rung_limit()
+            t_budget = self.sampler.ladder[rung_limit][0]
             chunks = []  # (request, start_row_in_request, ids)
+            n_union = 0
             for r in active:
                 if r is None:
                     continue
-                ids = r.targets[r._done: r._done + self.slot_targets]
+                if n_union >= t_budget:
+                    break  # degraded union budget: remaining slots wait
+                take = min(chunk, t_budget - n_union,
+                           len(r._serve_ids) - r._done)
+                ids = r._serve_ids[r._done: r._done + take]
                 chunks.append((r, r._done, np.asarray(ids, np.int64)))
-            if not chunks:  # queue held only degenerate requests
+                n_union += take
+            if not chunks:  # everything expired this pass
                 continue
+            self._maybe_failover(step)
             ids = np.concatenate([c[2] for c in chunks])
             t0 = time.perf_counter()
-            sb = self.sampler.sample(ids)
-            out = np.asarray(self.fn(self.params,
-                                     self._forward_batch(sb.batch)))
+            inj = self.injector
+            try:
+                sb = retry.run(
+                    "sampler",
+                    lambda: self.sampler.sample(ids, max_rung=rung_limit),
+                    hook=(lambda a: inj.check("sampler", step, a))
+                    if inj else None)
+                out = retry.run(
+                    "forward",
+                    lambda: np.asarray(
+                        self.fn(self.params, self._forward_batch(sb.batch))),
+                    hook=(lambda a: inj.check("forward", step, a))
+                    if inj else None)
+            except StepFailure as e:
+                wall = time.perf_counter() - t0
+                inj_lat = inj.latency_s(step) if inj else 0.0
+                wall_obs = wall + inj_lat
+                for r, _start, _cids in chunks:
+                    finalize_request(r, FAILED, self.n_classes,
+                                     error=str(e))
+                for s in range(self.slots):
+                    if active[s] is not None and active[s].status == FAILED:
+                        active[s] = None
+                deg.observe(inj_lat if self.res.slo_signal == "injected"
+                            else wall_obs)
+                self.step_log.append({
+                    "active_slots": len(chunks), "queue_len": len(q),
+                    "n_targets": int(len(ids)), "rung_index": -1,
+                    "frontier_bytes": 0.0, "truncated_rows": 0,
+                    "wall_s": wall, "wall_observed_s": wall_obs,
+                    "degrade_level": level_used, "failed": True,
+                    "error": str(e),
+                })
+                step += 1
+                continue
             rows = out[sb.target_rows]
             wall = time.perf_counter() - t0
+            inj_lat = inj.latency_s(step) if inj else 0.0
+            wall_obs = wall + inj_lat
             off = 0
             for r, start, cids in chunks:
                 n = len(cids)
-                if r.logits is None:
-                    r.logits = np.zeros((len(r.targets), rows.shape[1]),
-                                        rows.dtype)
-                r.logits[start: start + n] = rows[off: off + n]
+                if r._buf is None:
+                    r._buf = np.zeros((len(r._serve_ids), rows.shape[1]),
+                                      rows.dtype)
+                r._buf[start: start + n] = rows[off: off + n]
                 r._done = start + n
                 off += n
             for s in range(self.slots):
-                if active[s] is not None and active[s].finished:
+                r = active[s]
+                if r is not None and r._done >= len(r._serve_ids):
+                    finalize_request(r, OK, self.n_classes)
                     active[s] = None
+            deg.observe(inj_lat if self.res.slo_signal == "injected"
+                        else wall_obs)
             self.step_log.append({
                 "active_slots": len(chunks),
                 "queue_len": len(q),
@@ -176,18 +320,33 @@ class HGNNServeEngine:
                 "frontier_bytes": float(sb.meta["frontier_bytes"]),
                 "truncated_rows": int(sb.meta["truncated_rows"]),
                 "wall_s": wall,
+                "wall_observed_s": wall_obs,
+                "degrade_level": level_used,
             })
             self.last_sb = sb
+            step += 1
+        for r in requests:
+            self._status_counts[r.status] = (
+                self._status_counts.get(r.status, 0) + 1)
         return requests
 
     def stats(self) -> Dict:
-        """Deterministic serving counters (walls reported, never gated)."""
+        """Deterministic serving counters (walls reported, never gated).
+
+        ``compiles_after_warmup`` is ``None`` until :meth:`warmup` has run —
+        there is no warm cache to diff against, so a recompile count would
+        be meaningless (previously a silent ``-1`` sentinel).
+        """
         rung_hits: Dict[int, int] = {}
         for e in self.step_log:
+            if e.get("failed"):
+                continue  # failed steps sample no rung
             rung_hits[e["rung_index"]] = rung_hits.get(e["rung_index"], 0) + 1
-        compiles = (self.fn._cache_size() - self._warm_compiles
-                    if self._warm_compiles is not None else -1)
+        compiles = (int(self.fn._cache_size() - self._warm_compiles)
+                    if self._warm_compiles is not None else None)
         walls = [e["wall_s"] for e in self.step_log]
+        deg, retry, adm = self.degrade, self.retry, self.admission
+        inj_counts = dict(self.injector.counters) if self.injector else {}
         return {
             "steps": len(self.step_log),
             "rung_hits": {int(k): int(v)
@@ -196,9 +355,26 @@ class HGNNServeEngine:
                 sum(e["frontier_bytes"] for e in self.step_log)),
             "truncated_rows": int(
                 sum(e["truncated_rows"] for e in self.step_log)),
-            "compiles_after_warmup": int(compiles),
+            "compiles_after_warmup": compiles,
             "wall_total_s": float(sum(walls)),
             "wall_mean_ms": float(1e3 * np.mean(walls)) if walls else 0.0,
+            "resilience": {
+                **{k: int(v) for k, v in adm.counters.items()},
+                **{k: int(v) for k, v in retry.counters.items()},
+                **{k: int(v) for k, v in deg.counters.items()},
+                "retries": int(retry.counters["sampler_retries"]
+                               + retry.counters["forward_retries"]),
+                "deadline_expired": int(self._deadline_expired),
+                "failed_requests": int(
+                    self._status_counts.get(FAILED, 0)),
+                "partial_requests": int(
+                    self._status_counts.get(PARTIAL, 0)),
+                "ok_requests": int(self._status_counts.get(OK, 0)),
+                "partition_failovers": int(self._failovers),
+                "lost_partitions": list(self._lost_partitions),
+                "statuses": dict(self._status_counts),
+                "injected": inj_counts,
+            },
         }
 
 

@@ -202,27 +202,33 @@ class HGNNSampler:
     def _clamp(self, f_cap: int, t: str) -> int:
         return min(f_cap, self.hg.node_counts[t])
 
-    def pick_rung(self, n_targets: int, need: Dict[str, int]) -> int:
+    def pick_rung(self, n_targets: int, need: Dict[str, int],
+                  max_rung: Optional[int] = None) -> int:
         """Smallest rung fitting the targets and every type's real rows;
-        overflow falls through to the largest rung (frontier truncation)."""
+        overflow falls through to the largest allowed rung (frontier
+        truncation).  ``max_rung`` clamps the choice — the serve engine's
+        degradation controller passes it to fan work *down* the ladder
+        under pressure while staying inside the warmed rung set."""
         ladder = self.spec.ladder
-        for i, (t_cap, f_cap) in enumerate(ladder):
+        hi = (len(ladder) - 1 if max_rung is None
+              else min(int(max_rung), len(ladder) - 1))
+        for i, (t_cap, f_cap) in enumerate(ladder[: hi + 1]):
             if n_targets > t_cap:
                 continue
             if all(n <= self._clamp(f_cap, ty) for ty, n in need.items()):
                 return i
-        if n_targets > max(t for t, _ in ladder):
+        if n_targets > max(t for t, _ in ladder[: hi + 1]):
             raise ValueError(
-                f"{n_targets} targets overflow the ladder's largest t_cap "
-                f"{max(t for t, _ in ladder)} — chunk requests (the serve "
-                "engine's slot_targets does this)")
-        return len(ladder) - 1
+                f"{n_targets} targets overflow the ladder's largest "
+                f"allowed t_cap {max(t for t, _ in ladder[: hi + 1])} — "
+                "chunk requests (the serve engine's slot_targets does this)")
+        return hi
 
     # ------------------------------------------------------------------
     # sampling entry points
     # ------------------------------------------------------------------
-    def sample(self, targets: np.ndarray,
-               rung: Optional[int] = None) -> SampledBatch:
+    def sample(self, targets: np.ndarray, rung: Optional[int] = None,
+               max_rung: Optional[int] = None) -> SampledBatch:
         targets = np.asarray(targets, np.int64).reshape(-1)
         if len(targets) and (targets.min() < 0
                              or targets.max() >= self.n_target_type):
@@ -230,12 +236,12 @@ class HGNNSampler:
                              f"{self.target!r} ({self.n_target_type} nodes)")
         kind = self.plan.na.kind
         if kind == "gat":
-            return self._sample_gat(targets, rung)
+            return self._sample_gat(targets, rung, max_rung)
         if kind == "mean":
-            return self._sample_mean(targets, rung)
+            return self._sample_mean(targets, rung, max_rung)
         if kind == "instance":
-            return self._sample_instance(targets, rung)
-        return self._sample_gcn(targets, rung)
+            return self._sample_instance(targets, rung, max_rung)
+        return self._sample_gcn(targets, rung, max_rung)
 
     def dummy_batch(self, rung: int) -> SampledBatch:
         """An all-pad batch at the rung's exact shapes — warmup compiles the
@@ -326,14 +332,15 @@ class HGNNSampler:
             cur = new
         return hop_sets
 
-    def _sample_gat(self, targets: np.ndarray,
-                    rung: Optional[int]) -> SampledBatch:
+    def _sample_gat(self, targets: np.ndarray, rung: Optional[int],
+                    max_rung: Optional[int] = None) -> SampledBatch:
         cfg, plan = self.cfg, self.plan
         k = self.k_eff
         hop_sets = self._expand_gat(targets)
         frontier = self._frontier_order(hop_sets, targets)
         need = {self.target: len(targets) + len(frontier)}
-        rung_i = self.pick_rung(len(targets), need) if rung is None else rung
+        rung_i = (self.pick_rung(len(targets), need, max_rung)
+                  if rung is None else rung)
         f_cap = self._clamp(self.spec.ladder[rung_i][1], self.target)
         table = _TypeTable(self.n_target_type, f_cap, targets, frontier)
         tables = {self.target: table}
@@ -433,8 +440,8 @@ class HGNNSampler:
     # ------------------------------------------------------------------
     # RGCN — per-relation padded (or bucketed) tables, typed k-hop ball
     # ------------------------------------------------------------------
-    def _sample_mean(self, targets: np.ndarray,
-                     rung: Optional[int]) -> SampledBatch:
+    def _sample_mean(self, targets: np.ndarray, rung: Optional[int],
+                     max_rung: Optional[int] = None) -> SampledBatch:
         cfg, plan = self.cfg, self.plan
         k = self.k_eff
         # typed frontier expansion: per hop, every relation (s, r, d) pulls
@@ -477,8 +484,8 @@ class HGNNSampler:
             tgt = targets if t == self.target else np.zeros(0, np.int64)
             frontier = self._frontier_order(per_type_hops[t], tgt)
             need[t] = len(tgt) + len(frontier)
-        rung_i = (self.pick_rung(len(targets), need) if rung is None
-                  else rung)
+        rung_i = (self.pick_rung(len(targets), need, max_rung)
+                  if rung is None else rung)
         f_cap = self.spec.ladder[rung_i][1]
         for t in self.hg.node_counts:
             tgt = targets if t == self.target else np.zeros(0, np.int64)
@@ -548,8 +555,8 @@ class HGNNSampler:
     # ------------------------------------------------------------------
     # MAGNN — instance tables; frontier = instance node sets
     # ------------------------------------------------------------------
-    def _sample_instance(self, targets: np.ndarray,
-                         rung: Optional[int]) -> SampledBatch:
+    def _sample_instance(self, targets: np.ndarray, rung: Optional[int],
+                         max_rung: Optional[int] = None) -> SampledBatch:
         plan, cfg = self.plan, self.cfg
         i_cap = self.k_eff  # instances per target (the MAGNN fan-out knob)
         # target-type rows that need REAL instance rows: the requested
@@ -604,8 +611,8 @@ class HGNNSampler:
                     if per_type[t] else [])
             fr[t] = self._frontier_order(hops, tgt)
             need[t] = len(tgt) + len(fr[t])
-        rung_i = (self.pick_rung(len(targets), need) if rung is None
-                  else rung)
+        rung_i = (self.pick_rung(len(targets), need, max_rung)
+                  if rung is None else rung)
         f_cap = self.spec.ladder[rung_i][1]
         for t in sorted(types_used):
             tgt = targets if t == self.target else np.zeros(0, np.int64)
@@ -647,8 +654,8 @@ class HGNNSampler:
     # ------------------------------------------------------------------
     # GCN — homogeneous edge list, 2 aggregation hops per layer
     # ------------------------------------------------------------------
-    def _sample_gcn(self, targets: np.ndarray,
-                    rung: Optional[int]) -> SampledBatch:
+    def _sample_gcn(self, targets: np.ndarray, rung: Optional[int],
+                    max_rung: Optional[int] = None) -> SampledBatch:
         plan = self.plan
         k = self.k_eff
         indptr, indices = self.csr.indptr, self.csr.indices
@@ -672,7 +679,8 @@ class HGNNSampler:
             cur = new
         frontier = self._frontier_order(hop_sets, targets)
         need = {self.target: len(targets) + len(frontier)}
-        rung_i = self.pick_rung(len(targets), need) if rung is None else rung
+        rung_i = (self.pick_rung(len(targets), need, max_rung)
+                  if rung is None else rung)
         f_cap = self._clamp(self.spec.ladder[rung_i][1], self.target)
         table = _TypeTable(self.n_target_type, f_cap, targets, frontier)
 

@@ -1,0 +1,451 @@
+"""Serving resilience layer (repro.serve.resilience + repro.serve.faults).
+
+The ISSUE's acceptance behaviors, pinned deterministically:
+
+  * admission control turns bad traffic into structured REJECTED statuses
+    (dtype, id range, size cap) and sheds on a bounded queue — never a
+    mid-batch crash;
+  * degenerate (zero-target) requests complete OK at admission with
+    ``(0, n_classes)`` logits and never occupy a refill iteration;
+  * duplicate target ids are served once and fanned back out bit-exact;
+  * deadlines complete requests PARTIAL with exactly the rows served so far;
+  * transient injected faults are absorbed by bounded retries (requests
+    still OK), persistent faults fail only the affected slots' requests;
+  * SLO-driven degradation moves strictly inside the warmed ladder
+    (``compiles_after_warmup`` stays 0) and recovers when pressure drops;
+  * partition loss fails over to a survivors-only spec and post-failover
+    outputs are bit-exact vs a never-failed run.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import HGNNConfig
+from repro.core.models import get_model
+from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
+from repro.serve.engine import HGNNRequest, HGNNServeEngine
+from repro.serve.faults import Fault, FaultInjector, InjectedFault
+from repro.serve.resilience import (
+    FAILED, OK, PARTIAL, REJECTED, AdmissionController, DegradationController,
+    ResilienceConfig, RetryPolicy, StepFailure, finalize_request)
+from repro.serve.sampler import HGNNSampler
+
+
+def _tiny_tables():
+    DATASET_METAPATHS["tiny"] = [["M", "D", "M"], ["M", "A", "M"]]
+    DATASET_TARGET["tiny"] = "M"
+
+
+def _build(tiny_hg, model="han", fanout=64, **kw):
+    _tiny_tables()
+    kw = {"max_degree": 48, "max_instances": 4, "fused": True, **kw}
+    cfg = HGNNConfig(model=model, dataset="tiny", hidden=16, n_heads=4,
+                     n_classes=3, fanout=fanout, **kw)
+    m = get_model(cfg)
+    batch = m.prepare(tiny_hg)
+    params = m.init(jax.random.key(0), batch)
+    fn = jax.jit(m.executor.forward)
+    full = np.asarray(fn(params, batch))
+    sampler = HGNNSampler(m.plan(), cfg, tiny_hg)
+    return m, params, fn, full, sampler
+
+
+def _engine(tiny_hg, res=None, injector=None, slots=4, slot_targets=2,
+            warm=True, **kw):
+    m, params, fn, full, sampler = _build(tiny_hg, **kw)
+    eng = HGNNServeEngine(m.executor, params, sampler, slots=slots,
+                          slot_targets=slot_targets, fn=fn,
+                          resilience_cfg=res, injector=injector)
+    if warm:
+        eng.warmup()
+    return eng, full
+
+
+def _mixed_requests(n, n_nodes=40, seed=3):
+    rng = np.random.default_rng(seed)
+    return [HGNNRequest(targets=rng.integers(
+        0, n_nodes, size=int(rng.integers(1, 9)))) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# fault injector
+# ---------------------------------------------------------------------------
+
+
+def test_fault_injector_seeded_is_deterministic():
+    a = FaultInjector.seeded(5, n_steps=20, sampler=3, forward=2,
+                             persistent_sampler=1, latency_steps=4)
+    b = FaultInjector.seeded(5, n_steps=20, sampler=3, forward=2,
+                             persistent_sampler=1, latency_steps=4)
+    assert a.faults == b.faults
+    kinds = [f.kind for f in a.faults]
+    assert kinds.count("sampler") == 4 and kinds.count("forward") == 2
+    assert kinds.count("latency") == 4
+    # exception faults land on distinct steps
+    exc_steps = [f.step for f in a.faults if f.kind in ("sampler", "forward")]
+    assert len(exc_steps) == len(set(exc_steps))
+    c = FaultInjector.seeded(6, n_steps=20, sampler=3, forward=2,
+                             persistent_sampler=1, latency_steps=4)
+    assert c.faults != a.faults
+
+
+def test_fault_injector_hooks():
+    inj = FaultInjector([Fault(step=2, kind="sampler", attempts=2),
+                         Fault(step=3, kind="latency", latency_s=0.5),
+                         Fault(step=4, kind="partition", partition=1)])
+    inj.check("sampler", 1, 0)  # no fault scheduled -> no raise
+    with pytest.raises(InjectedFault):
+        inj.check("sampler", 2, 0)
+    with pytest.raises(InjectedFault):
+        inj.check("sampler", 2, 1)
+    inj.check("sampler", 2, 2)  # attempts window exhausted
+    assert inj.latency_s(1) == 0.0
+    assert inj.latency_s(3) == 0.5
+    assert inj.partition_loss(1) is None
+    assert inj.partition_loss(4) == 1
+    assert inj.counters == {"injected_sampler": 2, "injected_forward": 0,
+                            "injected_latency_steps": 1,
+                            "injected_partition_losses": 1}
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(step=0, kind="gpu_on_fire")
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_admission_rejects_malformed_requests(tiny_hg):
+    eng, full = _engine(tiny_hg, res=ResilienceConfig(max_request_targets=6))
+    reqs = [HGNNRequest(targets=np.array([1.5, 2.5])),          # bad dtype
+            HGNNRequest(targets=np.array([0, 40])),             # out of range
+            HGNNRequest(targets=np.array([-1, 3])),             # negative
+            HGNNRequest(targets=np.arange(7)),                  # over size cap
+            HGNNRequest(targets=np.array([5, 7]))]              # fine
+    eng.serve(reqs)
+    assert [r.status for r in reqs[:4]] == [REJECTED] * 4
+    for r in reqs[:4]:
+        assert r.error and r.logits.shape == (0, 3) and r.served.size == 0
+    assert reqs[4].status == OK
+    np.testing.assert_array_equal(reqs[4].logits, full[[5, 7]])
+    rs = eng.stats()["resilience"]
+    assert rs["rejected"] == 4 and rs["admitted"] == 1 and rs["shed"] == 0
+
+
+def test_bounded_queue_sheds_overflow(tiny_hg):
+    eng, full = _engine(tiny_hg, res=ResilienceConfig(max_queue=3))
+    reqs = _mixed_requests(8)
+    eng.serve(reqs)
+    statuses = [r.status for r in reqs]
+    assert statuses[:3] == [OK] * 3
+    assert statuses[3:] == [REJECTED] * 5
+    rs = eng.stats()["resilience"]
+    assert rs["shed"] == 5 and rs["rejected"] == 5 and rs["admitted"] == 3
+    for r in reqs[:3]:
+        np.testing.assert_array_equal(r.logits, full[r.targets])
+
+
+def test_dedup_serves_unique_ids_and_fans_back_out(tiny_hg):
+    eng, full = _engine(tiny_hg, slots=2, slot_targets=2)
+    r = HGNNRequest(targets=np.array([7, 3, 7, 7, 3, 9]))
+    eng.serve([r])
+    assert r.status == OK
+    np.testing.assert_array_equal(r.logits, full[r.targets])
+    np.testing.assert_array_equal(r.served, r.targets)
+    rs = eng.stats()["resilience"]
+    assert rs["deduped_rows"] == 3  # 6 rows, 3 unique ids
+    # only the 3 unique ids hit the union batch: ceil(3/2) forward steps
+    assert eng.stats()["steps"] == 2
+
+
+def test_degenerate_requests_never_occupy_a_refill_iteration(tiny_hg):
+    """Regression (satellite): zero-target requests used to enter the queue
+    and burn a refill slot each.  They must complete OK at admission with
+    ``(0, n_classes)`` logits, leaving the step count identical to a queue
+    without them."""
+    eng, full = _engine(tiny_hg, slots=2, slot_targets=2)
+    degens = [HGNNRequest(targets=np.zeros(0, np.int64)) for _ in range(6)]
+    real = HGNNRequest(targets=np.array([4, 11, 23]))
+    eng.serve(degens[:3] + [real] + degens[3:])
+    steps_mixed = eng.stats()["steps"]
+    for d in degens:
+        assert d.status == OK
+        assert d.logits.shape == (0, 3)
+        assert d.served.size == 0
+    np.testing.assert_array_equal(real.logits, full[real.targets])
+    assert eng.stats()["resilience"]["degenerate_completed"] == 6
+
+    eng2, _ = _engine(tiny_hg, slots=2, slot_targets=2)
+    eng2.serve([HGNNRequest(targets=np.array([4, 11, 23]))])
+    assert steps_mixed == eng2.stats()["steps"]
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_expired_deadline_completes_partial_with_zero_rows(tiny_hg):
+    eng, full = _engine(tiny_hg, res=ResilienceConfig(deadline_ms=0.0))
+    reqs = _mixed_requests(5)
+    eng.serve(reqs)
+    for r in reqs:
+        assert r.status == PARTIAL
+        assert r.error == "deadline expired"
+        assert r.logits.shape == (0, 3) and r.served.size == 0
+    rs = eng.stats()["resilience"]
+    assert rs["deadline_expired"] == 5 and rs["partial_requests"] == 5
+
+
+def test_per_request_deadline_overrides_engine_default(tiny_hg):
+    eng, full = _engine(tiny_hg, res=ResilienceConfig(deadline_ms=0.0))
+    fast = HGNNRequest(targets=np.array([2, 8]), deadline_ms=60_000.0)
+    doomed = HGNNRequest(targets=np.array([1, 3]))
+    eng.serve([doomed, fast])
+    assert doomed.status == PARTIAL
+    assert fast.status == OK
+    np.testing.assert_array_equal(fast.logits, full[[2, 8]])
+
+
+def test_partial_finalize_serves_exact_prefix(tiny_hg):
+    """finalize_request's compaction: with ``_done`` rows of the deduped
+    view served, PARTIAL keeps exactly the target rows whose unique id was
+    served, in request order, with ``served`` naming them."""
+    eng, full = _engine(tiny_hg, warm=False)
+    r = HGNNRequest(targets=np.array([9, 2, 9, 5, 2]))
+    assert eng.admission.admit(r, 0, now=0.0)
+    # unique ids sorted: [2, 5, 9]; serve the first 2 (ids 2 and 5)
+    r._buf = np.arange(9, dtype=np.float32).reshape(3, 3)
+    r._done = 2
+    finalize_request(r, PARTIAL, 3, error="deadline expired")
+    np.testing.assert_array_equal(r.served, [2, 5, 2])
+    np.testing.assert_array_equal(r.logits, r._buf[[0, 1, 0]])
+    assert r.status == PARTIAL
+
+
+# ---------------------------------------------------------------------------
+# retries and step failure
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_bounds_and_counters():
+    res = ResilienceConfig(max_retries=2)
+    pol = RetryPolicy(res)
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert pol.run("sampler", flaky) == "ok"
+    assert len(calls) == 3
+    assert pol.counters["sampler_retries"] == 2
+
+    with pytest.raises(StepFailure, match="forward failed after retries"):
+        pol.run("forward", lambda: (_ for _ in ()).throw(RuntimeError("die")))
+    assert pol.counters["forward_retries"] == 2
+    assert pol.counters["failed_steps"] == 1
+
+
+def test_transient_faults_are_absorbed_by_retries(tiny_hg):
+    inj = FaultInjector([Fault(step=1, kind="sampler", attempts=1),
+                         Fault(step=2, kind="forward", attempts=2)])
+    eng, full = _engine(tiny_hg, injector=inj)
+    reqs = _mixed_requests(10)
+    eng.serve(reqs)
+    for r in reqs:
+        assert r.status == OK
+        np.testing.assert_array_equal(r.logits, full[r.targets])
+    rs = eng.stats()["resilience"]
+    assert rs["sampler_retries"] == 1 and rs["forward_retries"] == 2
+    assert rs["retries"] == 3 and rs["failed_steps"] == 0
+    assert rs["injected"] == {"injected_sampler": 1, "injected_forward": 2,
+                              "injected_latency_steps": 0,
+                              "injected_partition_losses": 0}
+    assert eng.stats()["compiles_after_warmup"] == 0
+
+
+def test_persistent_fault_fails_only_the_affected_slots(tiny_hg):
+    """A persistent sampler fault at step 0 fails exactly the requests in
+    that step's slots; the freed slots refill and the rest of the queue
+    completes OK — no uncaught exception."""
+    inj = FaultInjector([Fault(step=0, kind="sampler", attempts=64)])
+    eng, full = _engine(tiny_hg, slots=2, slot_targets=2)
+    eng.injector = inj
+    reqs = [HGNNRequest(targets=np.array([1, 2])),
+            HGNNRequest(targets=np.array([3, 4])),
+            HGNNRequest(targets=np.array([5, 6]))]
+    eng.serve(reqs)
+    assert [r.status for r in reqs] == [FAILED, FAILED, OK]
+    for r in reqs[:2]:
+        assert "sampler failed after retries" in r.error
+        assert r.logits.shape == (0, 3) and r.served.size == 0
+    np.testing.assert_array_equal(reqs[2].logits, full[[5, 6]])
+    rs = eng.stats()["resilience"]
+    assert rs["failed_steps"] == 1 and rs["failed_requests"] == 2
+    assert rs["ok_requests"] == 1
+    # the failed step samples no rung
+    st = eng.stats()
+    assert sum(st["rung_hits"].values()) == st["steps"] - 1
+    assert eng.step_log[0]["failed"] and eng.step_log[0]["rung_index"] == -1
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation
+# ---------------------------------------------------------------------------
+
+
+def test_degradation_controller_levels():
+    res = ResilienceConfig(slo_ms=10.0, degrade_patience=2,
+                           recover_patience=2)
+    deg = DegradationController(res, n_rungs=3, slot_targets=4)
+    assert deg.max_level == 4  # 2 rung steps + log2(4) chunk halvings
+    assert (deg.chunk(), deg.rung_limit()) == (4, 2)
+    for _ in range(4):
+        deg.observe(0.05)  # 50ms > 10ms SLO
+    assert deg.level == 2
+    assert (deg.chunk(), deg.rung_limit()) == (1, 0)
+    for _ in range(4):
+        deg.observe(0.001)
+    assert deg.level == 0
+    c = deg.counters
+    assert c["degrade_transitions"] == 2 and c["recover_transitions"] == 2
+    assert c["max_degrade_level"] == 2
+    # level can never exceed max_level (chunk floors at 1, rung at 0)
+    for _ in range(40):
+        deg.observe(0.05)
+    assert deg.level == deg.max_level
+    assert deg.chunk() == 1 and deg.rung_limit() == 0
+
+
+def test_degradation_stays_inside_the_warmed_ladder(tiny_hg):
+    """Injected latency breaches the SLO (slo_signal='injected' makes the
+    trajectory host-independent); the engine shrinks chunks and clamps
+    rungs but never leaves the warmed shape space, then recovers."""
+    inj = FaultInjector([Fault(step=s, kind="latency", latency_s=0.2)
+                         for s in range(2, 8)])
+    res = ResilienceConfig(slo_ms=50.0, slo_signal="injected",
+                           degrade_patience=2, recover_patience=2)
+    eng, full = _engine(tiny_hg, res=res, injector=inj, slots=4,
+                        slot_targets=2)
+    reqs = _mixed_requests(24)
+    eng.serve(reqs)
+    st = eng.stats()
+    rs = st["resilience"]
+    assert all(r.status == OK for r in reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(r.logits, full[r.targets])
+    assert rs["degrade_transitions"] >= 1
+    assert rs["max_degrade_level"] >= 1
+    assert rs["recover_transitions"] >= 1
+    assert rs["degrade_steps"] >= 1
+    assert st["compiles_after_warmup"] == 0  # never left the warmed rungs
+    n_rungs = len(eng.sampler.ladder)
+    for e in eng.step_log:
+        assert 0 <= e["rung_index"] < n_rungs
+        assert e["wall_observed_s"] >= e["wall_s"]
+    # degradation actually bit on the union batch at peak pressure
+    assert max(e["degrade_level"] for e in eng.step_log) >= 1
+
+
+def test_degraded_rung_clamp_truncates_instead_of_recompiling(tiny_hg):
+    """Pressure pinned at max level: every step serves the smallest rung
+    with 1-target chunks; results for served rows remain bit-exact."""
+    inj = FaultInjector([Fault(step=s, kind="latency", latency_s=1.0)
+                         for s in range(0, 64)])
+    res = ResilienceConfig(slo_ms=1.0, slo_signal="injected",
+                           degrade_patience=1, recover_patience=99)
+    eng, full = _engine(tiny_hg, res=res, injector=inj, slots=4,
+                        slot_targets=2)
+    reqs = _mixed_requests(6)
+    eng.serve(reqs)
+    assert eng.stats()["compiles_after_warmup"] == 0
+    assert all(r.status == OK for r in reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(r.logits, full[r.targets])
+    assert eng.step_log[-1]["degrade_level"] == eng.degrade.max_level
+
+
+# ---------------------------------------------------------------------------
+# partition failover
+# ---------------------------------------------------------------------------
+
+
+def test_partition_failover_outputs_bit_exact_vs_never_failed(tiny_hg):
+    """K=4 partitioned serving loses partition 1 at step 2; the failover
+    re-partitions over the 3 survivors and every request's logits are
+    bit-exact the never-failed run's."""
+    def run(inj):
+        eng, full = _engine(tiny_hg, injector=inj, partitions=4)
+        reqs = _mixed_requests(10)
+        eng.serve(reqs)
+        return eng, reqs
+
+    inj = FaultInjector([Fault(step=2, kind="partition", partition=1)])
+    e1, r1 = run(inj)
+    e2, r2 = run(None)
+    assert all(r.status == OK for r in r1)
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.logits, b.logits)
+    rs = e1.stats()["resilience"]
+    assert rs["partition_failovers"] == 1
+    assert rs["lost_partitions"] == [1]
+    assert e1._serve_plan.partition.k == 3
+    assert e2._serve_plan.partition.k == 4
+    assert e2.stats()["resilience"]["partition_failovers"] == 0
+
+
+def test_failover_with_no_survivors_raises():
+    from repro.core.plan import PartitionSpec
+    from repro.dist.partition import surviving_partition_spec
+
+    spec = PartitionSpec(k=2)
+    assert surviving_partition_spec(spec, [1]).k == 1
+    with pytest.raises(RuntimeError, match="no surviving partitions"):
+        surviving_partition_spec(spec, [0, 1])
+    with pytest.raises(ValueError, match="out of range"):
+        surviving_partition_spec(spec, [5])
+
+
+# ---------------------------------------------------------------------------
+# stats surface
+# ---------------------------------------------------------------------------
+
+
+def test_stats_compiles_is_none_before_warmup(tiny_hg):
+    """Regression (satellite): stats() used to report a silent ``-1``
+    sentinel when warmup() never ran; it must be an explicit None."""
+    eng, full = _engine(tiny_hg, warm=False)
+    assert eng.stats()["compiles_after_warmup"] is None
+    eng.warmup()
+    eng.serve(_mixed_requests(4))
+    assert eng.stats()["compiles_after_warmup"] == 0
+
+
+def test_chaos_schedule_reaches_terminal_statuses_without_raising(tiny_hg):
+    """The ISSUE's seeded chaos bar: sampler exceptions + a forward failure
+    + latency pressure over a mixed queue -> every admissible request ends
+    OK / PARTIAL / FAILED, nothing raises, counters are replay-identical."""
+    def run():
+        inj = FaultInjector.seeded(0, n_steps=12, sampler=2, forward=1,
+                                   persistent_sampler=1, latency_steps=3,
+                                   latency_s=0.2)
+        res = ResilienceConfig(max_queue=32, slo_ms=50.0,
+                               slo_signal="injected", deadline_ms=60_000.0)
+        eng, full = _engine(tiny_hg, res=res, injector=inj)
+        reqs = _mixed_requests(20) + [HGNNRequest(targets=np.zeros(0))]
+        eng.serve(reqs)
+        return eng, reqs
+
+    e1, r1 = run()
+    e2, r2 = run()
+    assert all(r.finished for r in r1)
+    assert [r.status for r in r1] == [r.status for r in r2]
+    assert e1.stats()["resilience"] == e2.stats()["resilience"]
+    rs = e1.stats()["resilience"]
+    assert rs["retries"] > 0
+    assert rs["failed_steps"] >= 1 and rs["failed_requests"] >= 1
+    assert rs["ok_requests"] + rs["failed_requests"] == 21
+    assert e1.stats()["compiles_after_warmup"] == 0
