@@ -1,0 +1,72 @@
+"""Hot-feature residency: hit-rate vs NA HBM-bytes sweep.
+
+Sweeps the cache capacity (``cfg.cache_rows``) for HAN (stacked metapath
+layout) and RGCN (per-relation padded layout) on IMDB and records, per C:
+
+* the deterministic cache counters (``repro.core.residency`` — hits, misses,
+  total gathered rows, hit rate) from one full pass over the plan's gather
+  tables;
+* what the cache does to the dominant stage — the NA record's ``hbm_bytes``
+  after the residency accounting (hits x row_bytes saved per layer, fill
+  charged once) and the NA wall time;
+* the saved bytes themselves (``bytes_saved_total``), the paper-facing
+  "N% of NA traffic is re-gathered hot rows" quantity.
+
+C=0 is the uncached baseline.  The degree ordering is a deterministic
+host-side computation, so the counters replay exactly run to run —
+``benchmarks/run.py --check`` gates them at exact equality (walls stay
+ungated, the repo-wide convention).  Rows fold into ``BENCH_hgnn.json``
+under ``residency``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from benchmarks.common import emit, time_jitted
+from repro.configs.base import HGNNConfig
+from repro.core.models import get_model
+from repro.data.synthetic import make_dataset
+
+CASES = [("han", "imdb"), ("rgcn", "imdb")]
+CAPACITIES = (0, 64, 256, 1024)
+if os.environ.get("BENCH_SMOKE"):  # CI smoke: cheapest case under a timeout
+    CASES = [("han", "imdb")]
+    CAPACITIES = (0, 256)
+
+
+def run() -> list:
+    rows: list = []
+    for model, ds in CASES:
+        hg = make_dataset(ds)
+        for c in CAPACITIES:
+            cfg = HGNNConfig(model=model, dataset=ds, hidden=64, n_heads=8,
+                             n_classes=8, max_degree=32, fused=True,
+                             cache_rows=c)
+            m = get_model(cfg)
+            batch = m.prepare(hg)
+            params = m.init(jax.random.key(0), batch)
+            fns = m.executor.stage_fns(params, batch)
+            na_fn, na_args = fns["NA"]
+            na_us = time_jitted(na_fn, *na_args)
+            recs = m.stage_records(params, batch)
+            na_bytes = recs["stages"]["NA"]["hbm_bytes"]
+            if c:
+                rr = recs["residency"]
+                derived = (f"cache_rows={rr['cache_rows']} "
+                           f"hits={rr['hits']} misses={rr['misses']} "
+                           f"rows={rr['rows']} "
+                           f"hit_rate={rr['hit_rate']:.4f} "
+                           f"na_hbm_bytes={na_bytes:.0f} "
+                           f"bytes_saved={rr['bytes_saved_total']:.0f}")
+            else:
+                derived = (f"cache_rows=0 hits=0 misses=0 rows=0 "
+                           f"hit_rate=0.0000 na_hbm_bytes={na_bytes:.0f} "
+                           f"bytes_saved=0")
+            rows.append((f"residency/{model}/{ds}/c{c}", na_us, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -45,6 +45,7 @@ MODULES = [
     "bench_layers",              # L-layer depth sweep: stage mix + halo x L
     "bench_serving",             # request-path slot serving: sampled minibatch
     "bench_resilience",          # seeded chaos: retries/degrade/shed/failover
+    "bench_residency",           # hot-row cache: hit-rate vs NA HBM bytes
     "bench_lm_roofline",         # 40-cell arch x shape roofline table
 ]
 
@@ -170,6 +171,31 @@ def parse_resilience(rows) -> dict:
     return out
 
 
+def parse_residency(rows) -> dict:
+    """``residency/<model>/<ds>/c<C>`` rows -> {case: record}.
+
+    ``na_us`` is the latency wall (recorded, never gated); the counters are
+    deterministic host-side degree-ordering output — hits/misses/rows replay
+    exactly, so ``--check`` compares them at exact equality."""
+    out: dict = {}
+    for name, us, derived in rows or []:
+        m = re.fullmatch(r"residency/(\w+)/(\w+)/c(\d+)", name)
+        if not m:
+            continue
+        d = dict(kv.split("=", 1) for kv in derived.split())
+        out[f"{m.group(1)}/{m.group(2)}/c{m.group(3)}"] = {
+            "na_us": round(us, 1),
+            "cache_rows": int(d["cache_rows"]),
+            "hits": int(d["hits"]),
+            "misses": int(d["misses"]),
+            "rows": int(d["rows"]),
+            "hit_rate": float(d["hit_rate"]),
+            "na_hbm_bytes": float(d["na_hbm_bytes"]),
+            "bytes_saved": float(d["bytes_saved"]),
+        }
+    return out
+
+
 def check_regression(results: dict, threshold: float = 0.20) -> None:
     """Bench-regression gate: diff the fresh NA/SA stage costs against the
     committed ``BENCH_hgnn.json``; fail on >``threshold`` regression.
@@ -192,7 +218,8 @@ def check_regression(results: dict, threshold: float = 0.20) -> None:
     ly = results.get("bench_layers")
     sv = results.get("bench_serving")
     rz = results.get("bench_resilience")
-    if (not sb and not pt and not ly and not sv and not rz) \
+    rd = results.get("bench_residency")
+    if (not sb and not pt and not ly and not sv and not rz and not rd) \
             or not BENCH_JSON.exists():
         return
     try:
@@ -378,6 +405,39 @@ def check_regression(results: dict, threshold: float = 0.20) -> None:
                     regressions.append(
                         f"resilience/{case} {key}: {prev[key]} -> {rec[key]} "
                         "(seeded chaos counters must replay exactly)")
+    if rd:
+        # residency gate: the hit/miss counters are deterministic output of
+        # the degree ordering over the same graph's gather tables, so the
+        # comparison is EXACT equality — any drift means the hot-set
+        # selection or the reference counting changed, not noise.  The NA
+        # bytes after the cache accounting are deterministic too (HLO walk
+        # minus counters) and gate at the usual growth threshold; walls
+        # (na_us) stay ungated as everywhere else.
+        old_rd = committed.get("residency", {})
+        fresh_rd = parse_residency(rd)
+        if not fresh_rd and old_rd:
+            regressions.append("bench_residency rows parsed to zero cases "
+                               "(row naming / gate regex drift?)")
+        for case, rec in fresh_rd.items():
+            prev = old_rd.get(case)
+            if not prev:
+                continue
+            for key in ("cache_rows", "hits", "misses", "rows"):
+                if key not in rec:
+                    regressions.append(
+                        f"residency/{case} {key}: recorded counter missing "
+                        "from the fresh run")
+                elif rec[key] != prev.get(key):
+                    regressions.append(
+                        f"residency/{case} {key}: {prev.get(key)} -> "
+                        f"{rec[key]} (degree-ordered counters must replay "
+                        "exactly)")
+            pv = prev.get("na_hbm_bytes")
+            if pv and rec["na_hbm_bytes"] > pv * (1 + threshold):
+                regressions.append(
+                    f"residency/{case} na_hbm_bytes: {pv:.3g} -> "
+                    f"{rec['na_hbm_bytes']:.3g} "
+                    f"(+{100 * (rec['na_hbm_bytes'] / pv - 1):.0f}%)")
     if regressions:
         raise SystemExit("bench regression gate (>"
                          f"{int(threshold * 100)}% vs {BENCH_JSON.name}): "
@@ -469,7 +529,12 @@ def write_bench_json(results: dict) -> None:
         # merge per case so a BENCH_SMOKE run (one chaos case + failover)
         # never shrinks the committed chaos sweep
         data.setdefault("resilience", {}).update(parse_resilience(rz))
-    if sb or nf or se or pt or ly or sv or rz:
+    rd = results.get("bench_residency")
+    if rd:
+        # merge per case so a BENCH_SMOKE run (one case, two capacities)
+        # never shrinks the committed capacity sweep
+        data.setdefault("residency", {}).update(parse_residency(rd))
+    if sb or nf or se or pt or ly or sv or rz or rd:
         BENCH_JSON.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
         print(f"# wrote {BENCH_JSON.name}", flush=True)
 

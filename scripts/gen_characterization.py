@@ -369,6 +369,50 @@ def _resilience(data: dict) -> list:
     return out
 
 
+def _residency(data: dict) -> list:
+    rs = data.get("residency")
+    if not rs:
+        return []
+    out = [
+        "",
+        "## Hot-feature residency: hit rate vs NA HBM bytes "
+        "(`repro.core.residency`)",
+        "",
+        "Beyond-paper: the top-C highest-degree source rows per type are "
+        "LUT-remapped into a cache section of the feature pool that the "
+        "Pallas gather keeps VMEM-resident (`kernels/feature_cache.py`), "
+        "so the memory-bound NA stage re-reads hot rows on-chip instead of "
+        "from HBM (`benchmarks/bench_residency.py`).  Hit counters are "
+        "deterministic plan-time quantities, gated at exact equality by "
+        "`benchmarks/run.py --check`; walls are recorded, never gated.  "
+        "`C` is the per-type capacity (`--cache-rows`), *rows cached* the "
+        "summed hot-set size across source types; C=0 is the uncached "
+        "baseline.  The fill + pool-concat overhead means a too-small "
+        "cache can cost bytes until the hit mass amortizes it — the "
+        "crossover is the point of the sweep.",
+        "",
+        "| model/dataset | C | rows cached | hit rate | hits / rows | "
+        "NA HBM bytes | bytes saved | NA wall |",
+        "| --- | --- | --- | --- | --- | --- | --- | --- |",
+    ]
+
+    def sort_key(case):
+        base, _, cpart = case.rpartition("/c")
+        return (base, int(cpart) if cpart.isdigit() else 0)
+
+    for case in sorted(rs, key=sort_key):
+        base, _, cpart = case.rpartition("/c")
+        r = rs[case]
+        out.append(
+            f"| {base} | {cpart} | {r.get('cache_rows', 0)} | "
+            f"{100.0 * r.get('hit_rate', 0.0):.1f}% | "
+            f"{r.get('hits', 0)} / {r.get('rows', 0)} | "
+            f"{_bytes(r.get('na_hbm_bytes', 0.0))} | "
+            f"{_bytes(r.get('bytes_saved', 0.0))} | "
+            f"{_us(r['na_us']) if 'na_us' in r else '—'} |")
+    return out
+
+
 def render(data: dict) -> str:
     lines = [HEADER]
     lines += _stage_breakdown(data)
@@ -379,16 +423,17 @@ def render(data: dict) -> str:
     lines += _layers(data)
     lines += _serving(data)
     lines += _resilience(data)
+    lines += _residency(data)
     lines += [
         "",
         "## Regenerating",
         "",
         "```bash",
         "# refresh the snapshot (stage breakdown + NA/SA fusion + partition",
-        "# + depth sweep + request-path serving + chaos counters)",
+        "# + depth sweep + request-path serving + chaos counters + residency)",
         "PYTHONPATH=src:. python benchmarks/run.py bench_stage_breakdown \\",
         "    bench_na_fused bench_sa_epilogue bench_partition bench_layers \\",
-        "    bench_serving bench_resilience",
+        "    bench_serving bench_resilience bench_residency",
         "# re-render this page",
         "python scripts/gen_characterization.py",
         "```",

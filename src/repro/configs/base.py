@@ -189,6 +189,14 @@ class HGNNConfig:
     # forward per rung at warmup and never recompiles while serving.
     # () = a small automatic ladder derived from fanout/layers.
     sample_ladder: Tuple[Tuple[int, int], ...] = ()
+    # Hot-feature residency (repro.core.residency): >= 1 keeps that many
+    # hot rows per node type resident in a degree-ordered feature cache.
+    # Every gather path consults it — NA neighbor tables remap into the
+    # cache-extended source pool, the partitioned arm's hot halo rows skip
+    # the exchange, and the serving engine's per-step sampled frontier
+    # runs against a live pinned cache. 0 = no cache (every gather re-reads
+    # HBM). Bit-exact by construction: cache rows are bitwise row copies.
+    cache_rows: int = 0
     seed: int = 0
 
     def __post_init__(self):

@@ -20,8 +20,9 @@ from repro.core import metapath as mp
 from repro.core import stages
 from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
-from repro.core.plan import (FPSpec, HeadSpec, LayerPlan, NASpec, SampleSpec,
-                             SASpec, StagePlan, default_sample_ladder)
+from repro.core.plan import (FPSpec, HeadSpec, LayerPlan, NASpec,
+                             ResidencySpec, SampleSpec, SASpec, StagePlan,
+                             default_sample_ladder)
 from repro.data.synthetic import DATASET_TARGET
 
 
@@ -43,6 +44,8 @@ class GCN(PlannedModel):
                 ladder=(cfg.sample_ladder or default_sample_ladder(
                     cfg.fanout, cfg.fanout, 2 * cfg.layers)),
                 seed=cfg.seed)
+        residency = (ResidencySpec(cache_rows=cfg.cache_rows)
+                     if cfg.cache_rows >= 1 else None)
         # one LayerPlan = one agg(relu(agg(h @ w))) block (the paper's
         # 2-conv GCN); extra layers stack that block with fresh [D, D]
         # combination weights before the classifier head
@@ -53,7 +56,8 @@ class GCN(PlannedModel):
                 LayerPlan(fp=FPSpec(kind="dense", sharded=False),
                           na=NASpec(kind="gcn", layout="csr",
                                     activation="relu"),
-                          sa=SASpec(kind="none"), handoff="target")
+                          sa=SASpec(kind="none"), handoff="target",
+                          residency=residency)
                 for l in range(self.cfg.layers)),
             head=HeadSpec(kind="linear", param="w2"),
             sample=sample,
@@ -63,10 +67,10 @@ class GCN(PlannedModel):
         t = self.target
         csr = mp.build_csr(hg, [t, t])
         seg, idx = stages.csr_to_edges(csr.indptr, csr.indices)
-        return {
+        return self._maybe_partition({
             "x": jnp.asarray(hg.features[t]),
             "seg": jnp.asarray(seg),
             "idx": jnp.asarray(idx),
             "n_nodes": hg.node_counts[t],
             "feat_dim": hg.feat_dim(t),
-        }
+        })

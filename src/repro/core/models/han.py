@@ -28,8 +28,8 @@ from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
 from repro.core.plan import (BUCKETED_BATCH_SPECS, PARTITION_BATCH_SPECS,
                              STACKED_BATCH_SPECS, FPSpec, HeadSpec, LayerPlan,
-                             NASpec, PartitionSpec, SampleSpec, SASpec,
-                             StagePlan, default_sample_ladder)
+                             NASpec, PartitionSpec, ResidencySpec, SampleSpec,
+                             SASpec, StagePlan, default_sample_ladder)
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
@@ -70,6 +70,8 @@ class HAN(PlannedModel):
                 ladder=(cfg.sample_ladder or default_sample_ladder(
                     cfg.fanout, len(self.metapaths) * k, cfg.layers)),
                 seed=cfg.seed)
+        residency = (ResidencySpec(cache_rows=cfg.cache_rows)
+                     if cfg.cache_rows >= 1 else None)
         # layer 0 projects the raw per-type features; the metapath graphs
         # are target->target, so every hidden layer re-projects only the
         # previous SA output (a dense [D, D] matmul, reshaped to heads)
@@ -81,7 +83,7 @@ class HAN(PlannedModel):
                     fp=(FPSpec(kind="per_type", sharded=True, heads=True)
                         if l == 0 else
                         FPSpec(kind="dense", sharded=True, heads=True)),
-                    na=na, sa=sa, handoff="target")
+                    na=na, sa=sa, handoff="target", residency=residency)
                 for l in range(cfg.layers)),
             head=HeadSpec(kind="linear"),
             metapaths=tuple(tuple(p) for p in self.metapaths),

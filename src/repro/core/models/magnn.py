@@ -26,8 +26,8 @@ from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
 from repro.core.plan import (INSTANCE_BATCH_SPECS, PARTITION_BATCH_SPECS,
                              FPSpec, HeadSpec, LayerPlan, NASpec,
-                             PartitionSpec, SampleSpec, SASpec, StagePlan,
-                             default_sample_ladder)
+                             PartitionSpec, ResidencySpec, SampleSpec, SASpec,
+                             StagePlan, default_sample_ladder)
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
@@ -63,12 +63,15 @@ class MAGNN(PlannedModel):
                         or default_sample_ladder(cfg.fanout, width,
                                                  cfg.layers)),
                 seed=cfg.seed)
+        residency = (ResidencySpec(cache_rows=cfg.cache_rows)
+                     if cfg.cache_rows >= 1 else None)
         return StagePlan(
             model="magnn",
             target=self.target,
             layers=tuple(
                 LayerPlan(fp=FPSpec(kind="per_type", sharded=False),
-                          na=na, sa=sa, handoff="target+carry", carry=carry)
+                          na=na, sa=sa, handoff="target+carry", carry=carry,
+                          residency=residency)
                 for l in range(cfg.layers)),
             head=HeadSpec(kind="linear"),
             metapaths=tuple(tuple(p) for p in self.metapaths),

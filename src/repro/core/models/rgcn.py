@@ -25,8 +25,8 @@ from repro.core.hgraph import HeteroGraph
 from repro.core.pipeline import PlannedModel
 from repro.core.plan import (PARTITION_BATCH_SPECS, RELATION_BATCH_SPECS,
                              FPSpec, HeadSpec, LayerPlan, NASpec,
-                             PartitionSpec, SampleSpec, SASpec, StagePlan,
-                             default_sample_ladder)
+                             PartitionSpec, ResidencySpec, SampleSpec, SASpec,
+                             StagePlan, default_sample_ladder)
 from repro.data.synthetic import DATASET_TARGET
 
 
@@ -63,6 +63,8 @@ class RGCN(PlannedModel):
                 ladder=(cfg.sample_ladder or default_sample_ladder(
                     cfg.fanout, 4 * k, cfg.layers)),
                 seed=cfg.seed)
+        residency = (ResidencySpec(cache_rows=cfg.cache_rows)
+                     if cfg.cache_rows >= 1 else None)
         # rel_sum SA updates EVERY node type (handoff="all"); hidden layers
         # need no FP — the per-layer w_rel / w_self matmuls inside NA/SA are
         # the layer's linear transform (h' = relu(W_0 h + sum mean(h_s) W_r))
@@ -73,7 +75,8 @@ class RGCN(PlannedModel):
                 LayerPlan(
                     fp=(FPSpec(kind="per_type", sharded=True) if l == 0
                         else FPSpec(kind="identity")),
-                    na=na, sa=SASpec(kind="rel_sum"), handoff="all")
+                    na=na, sa=SASpec(kind="rel_sum"), handoff="all",
+                    residency=residency)
                 for l in range(cfg.layers)),
             head=HeadSpec(kind="select_linear", target=self.target),
             batch_specs=(PARTITION_BATCH_SPECS if part is not None

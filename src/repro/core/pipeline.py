@@ -265,15 +265,42 @@ class StageGraphExecutor:
 
         part = batch["part"]
         mode = self.plan.partition.halo
+        res = batch.get("residency")
         out: Dict = {}
         for t, h in h_own.items():
             halo = _gather(h, part["halo_src"][t], mode=mode)
+            if res is not None and t in res.get("halo_slot", {}):
+                # residency arm (hot-halo path): halo entries whose global
+                # vertex is hot are overlaid from the partition-local cache
+                # — bitwise copies of owned rows — so they skip the
+                # exchange.  Pure indexing: bit-exact under both the
+                # shard_map and flat gather lowerings.
+                slot = res["halo_slot"][t]  # [K, H_max] (-1 = cold/pad)
+                tail = h.shape[2:]
+                cache = h.reshape((-1,) + tail)[res["hot_flat"][t]]
+                sel = jnp.take(cache, jnp.clip(slot, 0), axis=0)
+                cond = (slot >= 0).reshape(slot.shape + (1,) * len(tail))
+                halo = jnp.where(cond, sel, halo)
             out[t] = jnp.concatenate([h, halo], axis=1)
         return out
 
     # ------------------------------------------------------------------
     # Stage 3: Neighbor Aggregation
     # ------------------------------------------------------------------
+    def _res_pool(self, batch: Dict, t: str, x):
+        """Residency dispatch arm (``plan.residency`` + a prepared batch
+        that carries the hot sets): extend type ``t``'s source pool with
+        the resident cache section — bitwise copies of the hot rows, which
+        the remapped index tables address instead of re-gathering the
+        scattered HBM rows.  The hot sets are layer-invariant, so every
+        layer of an L-layer stack reuses the same resident rows (HiHGNN
+        inter-layer reuse).  Sampled/uncached batches pass through."""
+        res = batch.get("residency")
+        if res is None or "hot" not in res or t not in res["hot"]:
+            return x
+        return jnp.concatenate([x, jnp.take(x, res["hot"][t], axis=0)],
+                               axis=0)
+
     def na(self, params: Dict, batch: Dict, h):
         kind = self.plan.na.kind
         if self.plan.partition is not None:
@@ -288,23 +315,33 @@ class StageGraphExecutor:
             # both GCN aggregation layers are NA work (the paper's GNN
             # comparison has no semantic stage); the segment count comes
             # from h's static shape so the forward stays jit-able with the
-            # batch as an argument (batch["n_nodes"] would be a tracer)
+            # batch as an argument (batch["n_nodes"] would be a tracer).
+            # The residency pool covers both aggregations — the second one
+            # re-gathers z over the same remapped index table, which is the
+            # inter-layer reuse in its purest form.
+            t = self.plan.target
             z = jax.nn.relu(stages.mean_aggregate_csr(
-                h, batch["seg"], batch["idx"], h.shape[0]))
+                self._res_pool(batch, t, h), batch["seg"], batch["idx"],
+                h.shape[0]))
             return stages.mean_aggregate_csr(
-                z, batch["seg"], batch["idx"], z.shape[0])
+                self._res_pool(batch, t, z), batch["seg"], batch["idx"],
+                z.shape[0])
         raise ValueError(f"unknown NA kind {kind!r}")
 
     def _na_gat(self, params: Dict, batch: Dict, h: jax.Array):
         plan, cfg = self.plan, self.cfg
         act = _ACT[plan.na.activation]
+        # residency arm: the gather pool is the target table extended with
+        # the resident hot-row section (uncached batches: pool is h itself)
+        pool = self._res_pool(batch, plan.target, h)
         if plan.na.layout == "csr":
             # baseline: independent kernels per subgraph (paper Fig. 5c).
             # h [N, H, Dh] covers the target nodes, so its static leading
             # dim is the segment count (jit-safe: batch["n_nodes"] traces).
             outs: List[jax.Array] = []
             for p_i, (seg, idx) in zip(params["gat"], batch["edges"]):
-                z = stages.gat_aggregate_csr(p_i, h, h, seg, idx, h.shape[0])
+                z = stages.gat_aggregate_csr(p_i, h, pool, seg, idx,
+                                             h.shape[0])
                 outs.append(act(z).reshape(z.shape[0], -1))
             return outs  # list of [N, D]
         if plan.na.layout == "bucketed":
@@ -314,7 +351,8 @@ class StageGraphExecutor:
                 agg_fn = lambda p, hd, hs, nn, mm: kops.gat_aggregate(
                     p, hd, hs, nn, mm, use_pallas=True)
             z = jnp.stack([
-                stages.gat_aggregate_bucketed(p_i, h, h, bks, agg_fn=agg_fn)
+                stages.gat_aggregate_bucketed(p_i, h, pool, bks,
+                                              agg_fn=agg_fn)
                 for p_i, bks in zip(params["gat"], batch["buckets"])
             ])  # [P, N, H, Dh]
             z = act(z)
@@ -329,7 +367,7 @@ class StageGraphExecutor:
                 pp, hd, hs, nn, mm, use_pallas=True)
         z = stages.gat_aggregate_padded_stacked(
             params["gat"], h, batch["nbr"], batch["mask"],
-            stacked_fn=stacked_fn)
+            stacked_fn=stacked_fn, h_src=pool)
         z = act(z)
         return z.reshape(z.shape[0], z.shape[1], -1)  # [P, N, D]
 
@@ -343,7 +381,8 @@ class StageGraphExecutor:
                              f"(got {self.plan.na.activation!r})")
         kops = _kops()
         specs = stages.HGNN_STAGE_SPECS
-        h_src = stages.shard(h, *specs["na_src"])
+        h_src = stages.shard(self._res_pool(batch, self.plan.target, h),
+                             *specs["na_src"])
         nbr = stages.shard(batch["nbr"], None, *specs["na_nbr"])
         mask = stages.shard(batch["mask"], None, *specs["na_nbr"])
         z4, wp = kops.gat_aggregate_stacked_fused_sa(
@@ -364,10 +403,12 @@ class StageGraphExecutor:
         for key in sorted(batch["rels"]):
             s, r, d = key
             rel = batch["rels"][key]
+            # residency arm: cache-extended per-source-type gather pool
+            pool = self._res_pool(batch, s, h[s])
             if plan.na.layout == "csr":
                 # h[d]'s static leading dim is the destination-type count
                 # (jit-safe: batch["counts"] values trace)
-                agg = stages.mean_aggregate_csr(h[s], rel[0], rel[1],
+                agg = stages.mean_aggregate_csr(pool, rel[0], rel[1],
                                                 h[d].shape[0])
             elif plan.na.layout == "bucketed":
                 # the destination table's static leading dim is the row
@@ -375,10 +416,10 @@ class StageGraphExecutor:
                 # partition exactly those rows, for sampled rung-padded
                 # buckets the out-of-range pad row_ids scatter-drop)
                 agg = stages.mean_aggregate_bucketed(
-                    h[s], rel, h[d].shape[0], agg_fn=agg_fn)
+                    pool, rel, h[d].shape[0], agg_fn=agg_fn)
             else:  # padded
                 agg = stages.mean_aggregate_padded_sharded(
-                    h[s], rel[0], rel[1], agg_fn=agg_fn)
+                    pool, rel[0], rel[1], agg_fn=agg_fn)
             out["|".join(key)] = agg @ params["w_rel"][key]
         return out
 
@@ -387,6 +428,8 @@ class StageGraphExecutor:
         specs = stages.HGNN_STAGE_SPECS
         H = cfg.n_heads
         act = _ACT[plan.na.activation]
+        res = batch.get("residency")
+        hot = res["hot"] if res is not None and "hot" in res else {}
         outs: List[jax.Array] = []
         for p_i, (nodes, mask), types in zip(params["att"],
                                              batch["instances"],
@@ -394,10 +437,20 @@ class StageGraphExecutor:
             nodes = stages.shard(nodes, *specs["na_inst_nodes"])
             mask = stages.shard(mask, *specs["na_nbr"])
             n, i, l = nodes.shape
+
             # gather projected features per path position (types are static,
-            # carried by the plan)
+            # carried by the plan); the residency arm serves the remapped
+            # instance tables through the VMEM-resident cache gather
+            def gather(j):
+                ty = types[j]
+                if ty in hot:
+                    return _kops().cached_gather(
+                        h[ty], hot[ty], nodes[:, :, j],
+                        use_pallas=plan.na.use_pallas)
+                return h[ty][nodes[:, :, j]]
+
             h_path = jnp.stack(
-                [h[types[j]][nodes[:, :, j]] for j in range(l)], axis=2
+                [gather(j) for j in range(l)], axis=2
             )  # [N, I, L, D]
             h_path = h_path.reshape(n, i, l, H, -1)
             enc = stages.rotate_encoder(h_path)  # [N, I, H, Dh]
@@ -656,7 +709,8 @@ class StageGraphExecutor:
         first record (``characterize.sample_traffic``), with its traffic
         kept out of the compiled-stage ``total``."""
         from repro.core.characterize import (analyze_hlo_text,
-                                             partition_traffic, roofline,
+                                             partition_traffic,
+                                             residency_record, roofline,
                                              sample_traffic)
 
         fns = self.stage_fns(params, batch)
@@ -672,11 +726,34 @@ class StageGraphExecutor:
                 "hbm_bytes_by_class": rep["hbm_bytes_by_class"],
                 "roofline": roofline(rep, n_chips, 0.0),
             }
+        res = batch.get("residency")
+        rr = None
+        if res is not None:
+            # residency accounting: the HLO walker charges every gather at
+            # its structural size, so the cache's effect — hot rows served
+            # from the resident section instead of re-read from HBM — is
+            # applied from the deterministic hit counters.  The hot set is
+            # layer-invariant, so only the first cached stage pays the
+            # cache fill (HiHGNN inter-layer reuse); hot-halo savings land
+            # on the gather_halo records, NA savings on the NA records.
+            cached = [n for n in fns if n.endswith(
+                "gather_halo" if self.plan.partition is not None else "NA")]
+            rr = residency_record(res["counters"], 4 * self.cfg.hidden,
+                                  layers=len(cached))
+            for i, name in enumerate(cached):
+                saved = rr["bytes_saved_per_layer"] - (
+                    rr["fill_bytes"] if i == 0 else 0)
+                recs[name]["residency_bytes_saved"] = saved
+                recs[name]["hit_rate"] = rr["hit_rate"]
+                recs[name]["hbm_bytes"] = max(
+                    recs[name]["hbm_bytes"] - saved, 0)
         total = {  # compiled stages only — SAMPLE is a host-side gather
             "flops": sum(recs[n]["flops"] for n in fns),
             "hbm_bytes": sum(recs[n]["hbm_bytes"] for n in fns),
         }
         out = {"stages": recs, "total": total}
+        if rr is not None:
+            out["residency"] = rr
         gh_names = [n for n in fns if n.endswith("gather_halo")]
         if gh_names:
             # the communication stage's paper-facing metrics: exchanged halo
@@ -691,6 +768,10 @@ class StageGraphExecutor:
                 recs[name]["cut_edges"] = tr["cut_edges"]
             out["partition"] = partition_traffic(
                 batch["part"], fns[gh_names[0]][1][0], layers=len(gh_names))
+            if rr is not None:
+                # hot halo rows skip the exchange on every layer's re-run
+                out["partition"]["halo_bytes_saved_total"] = (
+                    rr["bytes_saved_total"])
         return out
 
 
@@ -716,14 +797,29 @@ class PlannedModel:
         raise NotImplementedError
 
     def _maybe_partition(self, batch: Dict) -> Dict:
-        """End-of-``prepare`` hook: rewrite the batch into the partitioned
-        layout when the plan declares one (``repro.dist.partition``)."""
+        """End-of-``prepare`` finalize hook: compute the residency hot sets
+        from the *unpartitioned* tables (degree ordering is a global-graph
+        property), rewrite the batch into the partitioned layout when the
+        plan declares one (``repro.dist.partition``), then apply/attach the
+        residency tables — single-device batches get their index tables
+        remapped into the cache-extended pool, partitioned batches get the
+        hot-halo overlay maps."""
         plan = self.plan()
-        if plan.partition is None:
-            return batch
-        from repro.dist.partition import partition_batch
+        tables = None
+        if plan.residency is not None:
+            from repro.core import residency as _rsd
 
-        return partition_batch(plan, batch)
+            tables = _rsd.build_tables(plan, batch)
+        if plan.partition is not None:
+            from repro.dist.partition import partition_batch
+
+            batch = partition_batch(plan, batch)
+            if tables is not None:
+                batch["residency"] = _rsd.partition_overlay(tables, batch)
+            return batch
+        if tables is not None:
+            batch = _rsd.apply(plan, batch, tables)
+        return batch
 
     def init(self, rng: jax.Array, batch: Dict) -> Dict:
         return self.executor.init(rng, batch)

@@ -157,6 +157,39 @@ class SampleSpec:
     seed: int = 0
 
 
+@dataclass(frozen=True)
+class ResidencySpec:
+    """Hot-feature residency (``repro.core.residency``).
+
+    A plan that carries a ``ResidencySpec`` declares that every gather
+    path consults a degree-ordered hot-row cache of ``cache_rows`` rows
+    per node type: ``prepare()``'s finalize hook selects each type's
+    top-``cache_rows`` rows by reference count (degree under the plan's
+    own index tables — stacked/bucketed/padded/instances/edge-lists),
+    materializes them as a contiguous cache section appended to the
+    source pool, and remaps the neighbor tables so hot references read
+    the cache section instead of re-gathering the scattered HBM rows.
+    The partitioned arm additionally overlays hot halo rows from a
+    partition-local cache so they skip the halo exchange, and the
+    serving engine runs its per-step sampled frontier against a live
+    :class:`~repro.core.residency.HotRowCache` with the in-flight
+    targets pinned.
+
+    HiHGNN-style inter-layer reuse falls out of the layer-invariant
+    index tables: the hot set and remap are computed once, so layer
+    *l*'s carried target table keeps the same rows resident and layer
+    *l+1*'s NA gathers them from the cache section, never HBM.
+
+    Bit-exact by construction — the cache holds bitwise row copies and
+    the remap is a pure index substitution.
+    """
+
+    cache_rows: int  # hot rows kept resident per node type (>= 1)
+    # serving: rows addressed by the in-flight slot batch are pinned and
+    # never evicted while the step is outstanding
+    pin_targets: bool = True
+
+
 def default_sample_ladder(
     fanout: int, width: int, hops: int = 1,
     t_rungs: Tuple[int, ...] = (8, 32, 128),
@@ -201,6 +234,10 @@ class LayerPlan:
     sa: SASpec
     handoff: str = "target"  # target | all | target+carry
     carry: Tuple[str, ...] = ()  # non-target types forwarded (target+carry)
+    # Hot-feature residency for this layer's gathers (None = every gather
+    # re-reads HBM).  Layer-uniform — the hot set is computed once from
+    # the layer-invariant index tables (see StagePlan.__post_init__).
+    residency: Optional[ResidencySpec] = None
 
 
 @dataclass(frozen=True)
@@ -240,14 +277,16 @@ class StagePlan:
             # layer 0's carry, so a differing hidden spec would be silently
             # ignored rather than honoured
             if (lp.na != lp0.na or lp.sa != lp0.sa
+                    or lp.residency != lp0.residency
                     or (lp.handoff, lp.carry) != (lp0.handoff, lp0.carry)):
                 raise ValueError(
-                    "NA/SA specs and the handoff/carry contract must be "
-                    "layer-uniform (the host-side index tables are built "
-                    "once and the executor dispatches every layer on layer "
-                    f"0's specs); layer {i} declares "
-                    f"{(lp.na, lp.sa, lp.handoff, lp.carry)} vs layer 0's "
-                    f"{(lp0.na, lp0.sa, lp0.handoff, lp0.carry)}")
+                    "NA/SA/residency specs and the handoff/carry contract "
+                    "must be layer-uniform (the host-side index tables are "
+                    "built once and the executor dispatches every layer on "
+                    f"layer 0's specs); layer {i} declares "
+                    f"{(lp.na, lp.sa, lp.residency, lp.handoff, lp.carry)} "
+                    f"vs layer 0's "
+                    f"{(lp0.na, lp0.sa, lp0.residency, lp0.handoff, lp0.carry)}")
 
     @property
     def n_layers(self) -> int:
@@ -267,6 +306,10 @@ class StagePlan:
     @property
     def sa(self) -> SASpec:
         return self.layers[0].sa
+
+    @property
+    def residency(self) -> Optional[ResidencySpec]:
+        return self.layers[0].residency
 
     @property
     def shards_on_mesh(self) -> bool:

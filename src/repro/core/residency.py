@@ -1,0 +1,369 @@
+"""Hot-feature residency: a degree-ordered feature cache for the NA gathers.
+
+The paper's characterization (and ours — ``BENCH_hgnn.json``
+``avg_na_share_pct`` ≈ 48%) shows Neighbor Aggregation is memory-bound on
+re-gathering the same high-degree rows from HBM: across metapaths, across
+partitions (halo rows), across layers (layer *l*'s carried target table is
+re-gathered by layer *l+1*'s NA), and across serving requests.  HiHGNN
+(arXiv:2307.12765) shows exploiting exactly this reusability is the largest
+available win.
+
+One subsystem, three consumers, all driven by the frozen
+:class:`~repro.core.plan.ResidencySpec` on the plan:
+
+* **Single-device batches** (:func:`build_tables` + :func:`apply`): per
+  source type, the top-``cache_rows`` rows by *reference count* under the
+  plan's own index tables (degree ordering) become the hot set.  The
+  neighbor tables are remapped through a LUT so hot references address a
+  contiguous cache section appended to the source pool
+  (``pool = concat(h, h[hot])`` — the executor's residency dispatch arm);
+  the section is a bitwise row copy, so outputs are bit-exact by
+  construction.  The hot set and remap are computed once from the
+  layer-invariant index tables, so every layer of an L-layer stack reuses
+  the same resident rows (the HiHGNN inter-layer reuse: only layer 0 pays
+  the cache fill).
+
+* **Partitioned batches** (:func:`partition_overlay`): hot sets come from
+  the *unpartitioned* tables (global degree ordering, before
+  ``partition_batch`` relabels).  Each partition keeps a local cache of the
+  hot rows it can serve (``hot_flat``), and every halo-table entry whose
+  global vertex is hot carries its cache slot (``halo_slot``) — the
+  executor's ``gather_halo`` overlays those rows from the cache so they
+  skip the exchange (``characterize`` reports the saved halo bytes).
+
+* **Serving** (:class:`HotRowCache`): the engine keeps a *live* cache per
+  type, degree-ordered by the graph's source degrees
+  (:func:`graph_degrees`), accessed by every step's sampled frontier with
+  the in-flight targets pinned.  Admission/eviction is deterministic: a
+  miss is admitted only if it outranks the lowest-priority unpinned
+  resident in ``(degree, -row_id)`` order, which is also the evictee.
+
+Everything here is host-side numpy; the device-side consumers are the
+executor's dispatch arms and ``kernels/feature_cache.cached_gather``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import StagePlan
+
+
+# ---------------------------------------------------------------------------
+# hot-set selection (static, degree-ordered)
+# ---------------------------------------------------------------------------
+
+
+def hot_set(counts: np.ndarray, capacity: int) -> np.ndarray:
+    """Top-``capacity`` row ids by ``(count desc, id asc)`` — slot 0 is the
+    hottest row.  Deterministic: ties break toward the smaller row id, and
+    the capacity clamps to the population."""
+    n = len(counts)
+    c = int(min(max(capacity, 0), n))
+    order = np.lexsort((np.arange(n), -np.asarray(counts)))
+    return order[:c].astype(np.int32)
+
+
+def _populations(plan: StagePlan, batch: Dict) -> Dict[str, int]:
+    if "feats" in batch:
+        return {t: int(f.shape[0]) for t, f in batch["feats"].items()}
+    # GCN: one homogeneous table
+    return {plan.target: int(batch["x"].shape[0])}
+
+
+def _iter_gathers(plan: StagePlan, batch: Dict) -> Iterator[Tuple]:
+    """Yield ``(src_type, idx_array, valid_mask_or_None)`` for every NA
+    gather table in a prepared (unpartitioned) batch, in deterministic
+    order.  ``idx_array`` and the mask always share a shape; ``None`` means
+    every entry is a real reference (edge-list layouts)."""
+    kind, layout = plan.na.kind, plan.na.layout
+    if kind == "gat":
+        t = plan.target
+        if layout == "csr":
+            for _seg, idx in batch["edges"]:
+                yield t, idx, None
+        elif layout == "bucketed":
+            for bks in batch["buckets"]:
+                for _row_ids, nbr, mask in bks:
+                    yield t, nbr, mask
+        else:  # stacked
+            yield t, batch["nbr"], batch["mask"]
+    elif kind == "mean":
+        for key in sorted(batch["rels"]):
+            s = key[0]
+            rel = batch["rels"][key]
+            if layout == "csr":
+                yield s, rel[1], None
+            elif layout == "bucketed":
+                for _row_ids, nbr, mask in rel:
+                    yield s, nbr, mask
+            else:  # padded
+                yield s, rel[0], rel[1]
+    elif kind == "instance":
+        for (nodes, mask), types in zip(batch["instances"], plan.metapaths):
+            for j, ty in enumerate(types):
+                yield ty, nodes[..., j], mask
+    elif kind == "gcn":
+        yield plan.target, batch["idx"], None
+    else:  # pragma: no cover - plan validation catches this earlier
+        raise ValueError(f"no residency gather walk for NA kind {kind!r}")
+
+
+@dataclass
+class ResidencyTables:
+    """Host-side product of :func:`build_tables` for one prepared batch."""
+
+    hot: Dict[str, np.ndarray]  # type -> [C_t] hot row ids, degree-ordered
+    rank: Dict[str, np.ndarray]  # type -> [N_t] row -> cache slot (-1 cold)
+    lut: Dict[str, np.ndarray]  # type -> [N_t] row -> extended-pool index
+    counts: Dict[str, np.ndarray]  # type -> [N_t] reference counts
+    populations: Dict[str, int]
+    cache_rows: int
+
+
+def build_tables(plan: StagePlan, batch: Dict) -> ResidencyTables:
+    """Reference-count every NA gather table and select per-type hot sets.
+
+    Runs on the *unpartitioned* batch in both modes — the degree ordering
+    is a global-graph property, not a per-partition one."""
+    spec = plan.residency
+    pops = _populations(plan, batch)
+    counts: Dict[str, np.ndarray] = {}
+    for t, idx, mask in _iter_gathers(plan, batch):
+        a = np.asarray(idx)
+        a = a[np.asarray(mask) > 0] if mask is not None else a.reshape(-1)
+        c = counts.get(t)
+        if c is None:
+            c = np.zeros(pops[t], np.int64)
+        counts[t] = c + np.bincount(a.astype(np.int64), minlength=pops[t])
+    hot = {t: hot_set(c, spec.cache_rows) for t, c in counts.items()}
+    rank, lut = {}, {}
+    for t, ht in hot.items():
+        n = pops[t]
+        r = np.full(n, -1, np.int32)
+        r[ht] = np.arange(len(ht), dtype=np.int32)
+        rank[t] = r
+        m = np.arange(n, dtype=np.int32)
+        m[ht] = n + np.arange(len(ht), dtype=np.int32)
+        lut[t] = m
+    return ResidencyTables(hot=hot, rank=rank, lut=lut, counts=counts,
+                           populations=pops, cache_rows=spec.cache_rows)
+
+
+def _count_hits(plan: StagePlan, batch: Dict,
+                tables: ResidencyTables) -> Dict[str, int]:
+    """Deterministic hit/miss counters over one full pass of the gather
+    tables: hits = valid references addressing a hot row, and
+    ``hits + misses == rows`` (total gathered rows) by construction."""
+    hits = rows = 0
+    for t, idx, mask in _iter_gathers(plan, batch):
+        a = np.asarray(idx)
+        a = a[np.asarray(mask) > 0] if mask is not None else a.reshape(-1)
+        rows += int(a.size)
+        hits += int((tables.rank[t][a] >= 0).sum())
+    return {
+        "hits": hits,
+        "misses": rows - hits,
+        "rows": rows,
+        "cache_rows": int(sum(len(h) for h in tables.hot.values())),
+    }
+
+
+def apply(plan: StagePlan, batch: Dict, tables: ResidencyTables) -> Dict:
+    """Single-device residency: remap every NA index table through the LUT
+    (hot references -> the cache section appended to the source pool) and
+    attach ``batch["residency"]`` (hot sets for the executor's pool arm +
+    the deterministic counters).  Pad entries remap too — they are
+    zero-weighted by their masks in every aggregation, so the substitution
+    is bit-exact."""
+    counters = _count_hits(plan, batch, tables)
+    lut = tables.lut
+    out = dict(batch)
+
+    def remap(t, a):
+        if t not in lut:
+            return a
+        return jnp.asarray(lut[t][np.asarray(a)])
+
+    kind, layout = plan.na.kind, plan.na.layout
+    if kind == "gat":
+        t = plan.target
+        if layout == "csr":
+            out["edges"] = [(seg, remap(t, idx))
+                            for seg, idx in batch["edges"]]
+        elif layout == "bucketed":
+            out["buckets"] = [
+                [(rid, remap(t, nbr), m) for rid, nbr, m in bks]
+                for bks in batch["buckets"]
+            ]
+        else:
+            out["nbr"] = remap(t, batch["nbr"])
+    elif kind == "mean":
+        rels = {}
+        for key, rel in batch["rels"].items():
+            s = key[0]
+            if layout == "csr":
+                rels[key] = (rel[0], remap(s, rel[1]))
+            elif layout == "bucketed":
+                rels[key] = [(rid, remap(s, nbr), m)
+                             for rid, nbr, m in rel]
+            else:
+                rels[key] = (remap(s, rel[0]), rel[1])
+        out["rels"] = rels
+    elif kind == "instance":
+        inst = []
+        for (nodes, mask), types in zip(batch["instances"], plan.metapaths):
+            nn = np.asarray(nodes).copy()
+            for j, ty in enumerate(types):
+                if ty in lut:
+                    nn[..., j] = lut[ty][nn[..., j]]
+            inst.append((jnp.asarray(nn), mask))
+        out["instances"] = inst
+    elif kind == "gcn":
+        out["idx"] = remap(plan.target, batch["idx"])
+    out["residency"] = {
+        "hot": {t: jnp.asarray(h, jnp.int32) for t, h in tables.hot.items()},
+        "counters": counters,
+    }
+    return out
+
+
+def partition_overlay(tables: ResidencyTables, batch: Dict) -> Dict:
+    """Partitioned residency: build the per-partition overlay tables from
+    an already-partitioned batch.
+
+    ``hot_flat[t]``  [C] flat own-order indices (``owner * n_max + local``)
+                     of the hot rows — each partition-local cache row is a
+                     bitwise copy of an owned row somewhere in the pod.
+    ``halo_slot[t]`` [K, H_max] cache slot per halo-table entry, -1 when the
+                     entry's global vertex is cold (or a pad).  The
+                     executor's ``gather_halo`` overlays slot >= 0 entries
+                     from the cache, so hot halo rows skip the exchange.
+    """
+    part = batch["part"]
+    hot_flat: Dict = {}
+    halo_slot: Dict = {}
+    hits = rows = 0
+    for t, hot_g in tables.hot.items():
+        if t not in part.get("own", {}):
+            continue
+        own = np.asarray(part["own"][t])
+        om = np.asarray(part["own_mask"][t]).reshape(-1) > 0
+        of = own.reshape(-1)
+        n_t = tables.populations[t]
+        g2f = np.full(n_t, -1, np.int64)
+        g2f[of[om]] = np.nonzero(om)[0]
+        hf = g2f[hot_g]
+        assert (hf >= 0).all(), f"hot rows of type {t!r} must all be owned"
+        rank = tables.rank[t]
+        hs = np.asarray(part["halo_src"][t])
+        hm = np.asarray(part["halo_mask"][t]) > 0
+        halo_g = of[hs.reshape(-1)].reshape(hs.shape)
+        slot = np.where(hm, rank[halo_g], -1).astype(np.int32)
+        hot_flat[t] = jnp.asarray(hf, jnp.int32)
+        halo_slot[t] = jnp.asarray(slot)
+        hits += int((slot >= 0).sum())
+        rows += int(hm.sum())
+    return {
+        "hot_flat": hot_flat,
+        "halo_slot": halo_slot,
+        "counters": {
+            "hits": hits,
+            "misses": rows - hits,
+            "rows": rows,
+            "cache_rows": int(sum(len(h) for h in tables.hot.values())),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# the live cache (serving's per-step sampled frontier)
+# ---------------------------------------------------------------------------
+
+
+def graph_degrees(hg) -> Dict[str, np.ndarray]:
+    """Per-type source degrees — how often each vertex is gathered as a
+    neighbor source across every relation.  The serving cache's priority
+    ordering (a degree proxy for the request-time reference counts)."""
+    deg = {t: np.zeros(n, np.int64) for t, n in hg.node_counts.items()}
+    for (s, _r, _d), a in hg.relations.items():
+        deg[s] += np.asarray(a.sum(axis=1)).reshape(-1).astype(np.int64)
+    return deg
+
+
+class HotRowCache:
+    """Deterministic degree-priority hot-row cache (host-side simulator and
+    the serving engine's live per-type cache).
+
+    Priority of row ``r`` is ``(degree[r], -r)`` — higher is better, and no
+    two rows tie.  On a miss with a full cache, the candidate is admitted
+    only if it outranks the lowest-priority *unpinned* resident, which is
+    evicted; pinned rows are never evicted.  Replaying the same access
+    trace therefore always reproduces the same resident set and counters.
+    """
+
+    def __init__(self, capacity: int, degree: np.ndarray):
+        self.degree = np.asarray(degree)
+        self.capacity = int(min(max(capacity, 0), len(self.degree)))
+        self.resident: set = set()
+        self.pinned: set = set()
+        self.hits = 0
+        self.misses = 0
+        self.inserts = 0
+        self.evictions = 0
+
+    def _prio(self, r: int) -> Tuple[int, int]:
+        return (int(self.degree[r]), -int(r))
+
+    def access(self, row) -> bool:
+        """One gather of ``row``: returns True on a cache hit; a miss runs
+        the deterministic admission/eviction policy."""
+        row = int(row)
+        if row in self.resident:
+            self.hits += 1
+            return True
+        self.misses += 1
+        if self.capacity == 0:
+            return False
+        if len(self.resident) < self.capacity:
+            self.resident.add(row)
+            self.inserts += 1
+            return False
+        unpinned = [r for r in self.resident if r not in self.pinned]
+        if not unpinned:
+            return False  # everything pinned by the in-flight batch
+        victim = min(unpinned, key=self._prio)
+        if self._prio(row) > self._prio(victim):
+            self.resident.discard(victim)
+            self.evictions += 1
+            self.resident.add(row)
+            self.inserts += 1
+        return False
+
+    def access_many(self, rows) -> Tuple[int, int]:
+        h0, m0 = self.hits, self.misses
+        for r in np.asarray(rows).reshape(-1):
+            self.access(r)
+        return self.hits - h0, self.misses - m0
+
+    def pin(self, rows) -> None:
+        self.pinned.update(int(r) for r in np.asarray(rows).reshape(-1))
+
+    def unpin(self, rows) -> None:
+        self.pinned.difference_update(
+            int(r) for r in np.asarray(rows).reshape(-1))
+
+    @property
+    def counters(self) -> Dict[str, int]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "rows": self.hits + self.misses,
+            "inserts": self.inserts,
+            "evictions": self.evictions,
+            "resident": len(self.resident),
+            "capacity": self.capacity,
+        }

@@ -165,14 +165,18 @@ def gat_aggregate_padded_stacked(
     mask: jax.Array,
     agg_fn: Optional[Callable] = None,
     stacked_fn: Optional[Callable] = None,
+    h_src: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Inter-subgraph-parallel NA over stacked padded subgraphs with the
     stage-aware sharding applied at the stacked level (constraints sit
     outside the vmap): destination nodes over BATCH, source pool replicated,
     metapath dim unsharded.  ``agg_fn`` swaps the per-subgraph body (vmapped
     over the stack); ``stacked_fn`` consumes the whole ``[P, N, K]`` stack in
-    one call — the fused Pallas GAT-NA kernel path, ONE launch per stack."""
-    h_src = shard(h, *HGNN_STAGE_SPECS["na_src"])
+    one call — the fused Pallas GAT-NA kernel path, ONE launch per stack.
+    ``h_src`` swaps the gather pool (default: the destination table itself;
+    the residency arm passes the cache-extended pool)."""
+    h_src = shard(h if h_src is None else h_src,
+                  *HGNN_STAGE_SPECS["na_src"])
     nbr = shard(nbr, None, *HGNN_STAGE_SPECS["na_nbr"])
     mask = shard(mask, None, *HGNN_STAGE_SPECS["na_nbr"])
     if stacked_fn is not None:

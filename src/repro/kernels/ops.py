@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import (
     decode_attention as _dec,
+    feature_cache as _fc,
     flash_attention as _fa,
     fused_fp_na as _ffn,
     gat_na as _gat,
@@ -70,6 +71,18 @@ def decode_attention(q, k, v, kv_len, use_pallas: bool = False,
     if use_pallas and (_on_tpu() or interpret):
         return _dec.decode_attention(q, k, v, kv_len, interpret=interpret)
     return ref.decode_attention(q, k, v, kv_len)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def cached_gather(table, hot, idx, use_pallas: bool = False,
+                  interpret: bool = False):
+    """Hot-row cache gather (``repro.core.residency``): reads from the
+    extended pool ``concat(table, table[hot])`` with the cache section
+    VMEM-resident on the Pallas path (kernels/feature_cache.py).  Indices
+    ``>= len(table)`` hit the cache; the rest gather from HBM."""
+    if use_pallas and (_on_tpu() or interpret):
+        return _fc.cached_gather(table, hot, idx, interpret=interpret)
+    return ref.cached_gather(table, hot, idx)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))

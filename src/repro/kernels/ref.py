@@ -39,6 +39,17 @@ def fused_fp_na(
     return segment_spmm(x_src, nbr, mask, mean=mean) @ w
 
 
+def cached_gather(
+    table: jax.Array,  # [N, D]
+    hot: jax.Array,  # [C] int32 hot row ids
+    idx: jax.Array,  # [...] int32 indices into the extended pool [0, N+C)
+) -> jax.Array:
+    """Hot-row cache gather oracle: the extended pool is the table with the
+    hot rows' bitwise copies appended (``kernels/feature_cache.py``)."""
+    pool = jnp.concatenate([table, jnp.take(table, hot, axis=0)], axis=0)
+    return jnp.take(pool, idx, axis=0)
+
+
 def gat_na(
     p,  # {"a_dst": [H, Dh], "a_src": [H, Dh]} (leading [S] dim when stacked)
     h_dst: jax.Array,  # [N, H, Dh]

@@ -190,6 +190,11 @@ def run_hgnn_serve(args, cfg: HGNNConfig, hg, built: BuiltHGNNInfer) -> None:
           f"degrade_steps={rs['degrade_steps']} "
           f"max_degrade_level={rs['max_degrade_level']} "
           f"failovers={rs['partition_failovers']}")
+    if "residency" in st:
+        rd = st["residency"]
+        print(f"  residency: cache_rows={rd['cache_rows']} "
+              f"hits={rd['hits']} misses={rd['misses']} rows={rd['rows']} "
+              f"hit_rate={rd['hit_rate']:.3f} evictions={rd['evictions']}")
     if args.characterize:
         sb = engine.last_sb
         recs = built.executor.stage_records(built.params, sb.batch,
@@ -221,7 +226,8 @@ def run_hgnn(args) -> None:
                      fuse_na_sa=args.fuse_na_sa,
                      partitions=args.partitions,
                      layers=args.layers,
-                     fanout=args.fanout)
+                     fanout=args.fanout,
+                     cache_rows=args.cache_rows)
     hg = make_dataset(args.dataset)
     mesh = None
     if args.mesh_data * args.mesh_model > 1:
@@ -251,6 +257,13 @@ def run_hgnn(args) -> None:
           f"{f' +partitions={part.k}' if part is not None else ''}"
           f"{f' x{n_l}layers' if n_l > 1 else ''}] "
           f"logits {logits.shape} on {mesh_desc}: {dt*1e3:.2f} ms/iter")
+    res = (built.batch.get("residency")
+           if isinstance(built.batch, dict) else None)
+    if res is not None:
+        ct = res["counters"]
+        print(f"  residency: cache_rows={ct['cache_rows']} "
+              f"hits={ct['hits']} misses={ct['misses']} rows={ct['rows']} "
+              f"hit_rate={ct['hits'] / max(ct['rows'], 1):.3f}")
     if args.characterize:
         # one stage_records call covers both the per-stage table and the
         # partition summary (lower+compile+HLO walk per stage is expensive)
@@ -302,6 +315,13 @@ def main() -> None:
                          "params; the graph-side index tables are built once "
                          "and reused; partitioned runs re-exchange updated "
                          "halo features every layer)")
+    ap.add_argument("--cache-rows", type=int, default=0,
+                    help=">=1: hot-feature residency — keep that many "
+                         "degree-ordered rows per source type resident "
+                         "(repro.core.residency); NA gathers serve hot rows "
+                         "from the cache section, partitioned runs skip the "
+                         "halo exchange for hot rows, and serving keeps a "
+                         "live per-type cache over the sampled frontier")
     ap.add_argument("--fanout", type=int, default=0,
                     help=">=1: request-path serving — neighbor-sampled "
                          "minibatch inference (per-hop fan-out cap) through "

@@ -144,6 +144,19 @@ class HGNNServeEngine:
         self._warm_compiles: Optional[int] = None
         self.step_log: List[Dict] = []
         self.last_sb = None
+        # residency: live per-type hot-row caches over the sampled frontier
+        # (repro.core.residency.HotRowCache).  Keyed by GLOBAL vertex ids and
+        # owned by the engine — not the per-step batch — so cache state is
+        # untouched by rung changes, degradation clamps, and partition
+        # failover, and the jitted forward's shapes never see the cache
+        # (compiles_after_warmup stays 0).
+        self.caches: Optional[Dict] = None
+        if self.plan.residency is not None:
+            from repro.core.residency import HotRowCache, graph_degrees
+
+            cap = self.plan.residency.cache_rows
+            self.caches = {t: HotRowCache(cap, d)
+                           for t, d in graph_degrees(sampler.hg).items()}
         self._fresh_policies()
 
     def _fresh_policies(self) -> None:
@@ -157,6 +170,22 @@ class HGNNServeEngine:
         self._failovers = 0
         self._lost_partitions: List[int] = []
         self._status_counts: Dict[str, int] = {}
+
+    def _cache_step(self, ids: np.ndarray, sb) -> None:
+        """One serving step's residency traffic: pin the in-flight targets
+        (never evicted while their request is being served), run the sampled
+        frontier — every type's local->global table — through the live
+        caches' deterministic admission policy, then unpin."""
+        spec = self.plan.residency
+        tgt = self.plan.target
+        pin = spec.pin_targets and tgt in self.caches
+        if pin:
+            self.caches[tgt].pin(ids)
+        for t, loc in sb.local.items():
+            if t in self.caches:
+                self.caches[t].access_many(loc)
+        if pin:
+            self.caches[tgt].unpin(ids)
 
     def _forward_batch(self, batch: Dict) -> Dict:
         if self._serve_plan.partition is not None:
@@ -294,6 +323,8 @@ class HGNNServeEngine:
                 continue
             rows = out[sb.target_rows]
             wall = time.perf_counter() - t0
+            if self.caches is not None:  # host bookkeeping, untimed
+                self._cache_step(ids, sb)
             inj_lat = inj.latency_s(step) if inj else 0.0
             wall_obs = wall + inj_lat
             off = 0
@@ -347,7 +378,7 @@ class HGNNServeEngine:
         walls = [e["wall_s"] for e in self.step_log]
         deg, retry, adm = self.degrade, self.retry, self.admission
         inj_counts = dict(self.injector.counters) if self.injector else {}
-        return {
+        out = {
             "steps": len(self.step_log),
             "rung_hits": {int(k): int(v)
                           for k, v in sorted(rung_hits.items())},
@@ -376,6 +407,22 @@ class HGNNServeEngine:
                 "injected": inj_counts,
             },
         }
+        if self.caches is not None:
+            hits = sum(c.hits for c in self.caches.values())
+            misses = sum(c.misses for c in self.caches.values())
+            out["residency"] = {
+                "per_type": {t: dict(c.counters)
+                             for t, c in sorted(self.caches.items())},
+                "hits": int(hits),
+                "misses": int(misses),
+                "rows": int(hits + misses),
+                "hit_rate": float(hits / max(hits + misses, 1)),
+                "evictions": int(sum(c.evictions
+                                     for c in self.caches.values())),
+                "cache_rows": int(sum(c.capacity
+                                      for c in self.caches.values())),
+            }
+        return out
 
 
 @dataclasses.dataclass

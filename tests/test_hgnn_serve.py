@@ -146,3 +146,75 @@ def test_oversized_request_chunks_across_steps(tiny_hg):
     # one occupied slot contributing slot_targets=2 per step
     assert len(eng.step_log) == 12
     np.testing.assert_array_equal(big.logits, full[np.arange(23)])
+
+
+# ---------------------------------------------------------------------------
+# hot-feature residency: the live cache rides the serve loop untraced
+# ---------------------------------------------------------------------------
+
+
+def test_cached_zero_recompiles_across_rungs_and_degradation(tiny_hg):
+    """The live cache is engine-level host bookkeeping keyed by global ids:
+    mixed request sizes sweep the ladder rungs AND injected-latency
+    degradation clamps the rung choice, and the jit cache still never grows
+    after warmup — cache state is invisible to the traced shapes."""
+    from repro.serve.faults import Fault, FaultInjector
+    from repro.serve.resilience import ResilienceConfig
+
+    inj = FaultInjector([Fault(step=s, kind="latency", latency_s=0.2)
+                         for s in range(2, 8)])
+    res = ResilienceConfig(slo_ms=50.0, slo_signal="injected",
+                           degrade_patience=2, recover_patience=2)
+    m, params, fn, full, sampler = _build(tiny_hg, cache_rows=8)
+    eng = HGNNServeEngine(m.executor, params, sampler, slots=4,
+                          slot_targets=2, fn=fn, resilience_cfg=res,
+                          injector=inj)
+    eng.warmup()
+    reqs = _mixed_requests(24)
+    eng.serve(reqs)
+    st = eng.stats()
+    assert st["compiles_after_warmup"] == 0
+    assert len(st["rung_hits"]) >= 1
+    assert st["resilience"]["max_degrade_level"] >= 1
+    rd = st["residency"]
+    assert rd["hits"] + rd["misses"] == rd["rows"] > 0
+    assert rd["hits"] > 0  # slot chunking re-touches hot frontier rows
+    for t, c in rd["per_type"].items():
+        assert c["resident"] <= c["capacity"] <= 8, t
+    for r in reqs:
+        np.testing.assert_array_equal(r.logits, full[r.targets])
+
+
+def test_cache_state_survives_partition_failover_bit_exact(tiny_hg):
+    """K=4 partitioned serving loses partition 1 at step 2: the caches are
+    keyed by GLOBAL vertex ids and owned by the engine, so failover cannot
+    disturb them — post-recovery logits stay bit-exact vs a never-failed
+    cached run, and both runs replay identical residency counters."""
+    from repro.serve.faults import Fault, FaultInjector
+
+    def run(inj):
+        m, params, fn, full, sampler = _build(
+            tiny_hg, partitions=4, cache_rows=8)
+        eng = HGNNServeEngine(m.executor, params, sampler, slots=4,
+                              slot_targets=2, fn=fn, injector=inj)
+        eng.warmup()
+        reqs = _mixed_requests(10)
+        eng.serve(reqs)
+        return eng, reqs, full
+
+    inj = FaultInjector([Fault(step=2, kind="partition", partition=1)])
+    e1, r1, full = run(inj)
+    e2, r2, _ = run(None)
+    assert e1.stats()["resilience"]["partition_failovers"] == 1
+    assert e1._serve_plan.partition.k == 3
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a.logits, b.logits)
+        np.testing.assert_array_equal(a.logits, full[a.targets])
+    rd1, rd2 = e1.stats()["residency"], e2.stats()["residency"]
+    assert rd1 == rd2  # identical traces -> identical cache replay
+    assert rd1["rows"] > 0
+    # the caches themselves are untouched by the failover: same resident
+    # sets in both runs
+    for t in e1.caches:
+        assert e1.caches[t].resident == e2.caches[t].resident
+        assert e1.caches[t].pinned == set() == e2.caches[t].pinned

@@ -1,0 +1,281 @@
+"""Property tests for hot-feature residency (repro.core.residency).
+
+The cache-coherence contract, over randomized graphs / capacities / access
+traces (hypothesis, or the deterministic conftest stub on minimal CI images):
+
+  1. bit-exactness — for every NA layout the plan can express (stacked,
+     bucketed, padded per-relation, instance tables, csr edge lists), the
+     remapped index tables read the cache-extended pool to exactly the rows
+     the original tables read from HBM, and the ops/kernel ``cached_gather``
+     paths agree bitwise with a direct gather;
+  2. the hot set is the deterministic top-C of the degree ordering
+     ``(count desc, id asc)``;
+  3. pinned rows are never evicted from the live cache, and eviction replays
+     deterministically (same trace -> same resident set + counters);
+  4. conservation — ``hits + misses == rows`` (total gathered rows) on both
+     the static counters and the live cache.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import HGNNConfig
+from repro.core import residency as rsd
+from repro.core.hgraph import HeteroGraph
+from repro.core.models import get_model
+from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
+
+DATASET_METAPATHS["rest"] = [["M", "D", "M"], ["M", "A", "M"]]
+DATASET_TARGET["rest"] = "M"
+
+
+def _rand_hg(seed: int) -> HeteroGraph:
+    rng = np.random.default_rng(seed)
+    nm = int(rng.integers(12, 40))
+    nd = int(rng.integers(5, 16))
+    na = int(rng.integers(6, 20))
+    counts = {"M": nm, "D": nd, "A": na}
+    dims = {"M": 6, "D": 5, "A": 4}
+    feats = {t: rng.standard_normal((n, dims[t])).astype(np.float32)
+             for t, n in counts.items()}
+
+    def rr(ns, nd_, e):
+        r = rng.integers(0, ns, e)
+        c = rng.integers(0, nd_, e)
+        return sp.csr_matrix((np.ones(e, np.float32), (r, c)),
+                             shape=(ns, nd_))
+
+    md = rr(nm, nd, 3 * nm)
+    ma = rr(nm, na, 3 * nm)
+    g = HeteroGraph(
+        counts, feats,
+        {("M", "md", "D"): md, ("D", "dm", "M"): md.T.tocsr(),
+         ("M", "ma", "A"): ma, ("A", "am", "M"): ma.T.tocsr()},
+        name="rest")
+    g.validate()
+    return g
+
+
+LAYOUTS = [
+    ("han", {"fused": False}),          # csr edge lists
+    ("han", {"fused": True}),           # stacked [P, N, K]
+    ("han", {"fused": True, "degree_buckets": 3}),   # bucketed
+    ("rgcn", {"fused": False}),         # per-relation csr
+    ("rgcn", {"fused": True}),          # per-relation padded
+    ("rgcn", {"fused": True, "degree_buckets": 3}),  # per-relation bucketed
+    ("magnn", {}),                      # instance tables
+]
+
+
+def _cfg(model, cache_rows=0, **kw):
+    kw = {"max_degree": 8, "max_instances": 4, **kw}
+    return HGNNConfig(model=model, dataset="rest", hidden=16, n_heads=4,
+                      n_classes=3, cache_rows=cache_rows, **kw)
+
+
+# ---------------------------------------------------------------------------
+# 1. bit-exactness of the remapped gathers, every layout
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), cap=st.integers(1, 64),
+       case=st.sampled_from(LAYOUTS))
+def test_remapped_gathers_read_exact_rows(seed, cap, case):
+    """For every gather table the plan declares, the LUT-remapped indices
+    address the cache-extended pool ``concat(h, h[hot])`` to bitwise the
+    same rows the original indices address in ``h`` — the invariant the
+    executor's residency arm rides for free."""
+    model, kw = case
+    hg = _rand_hg(seed)
+    m0 = get_model(_cfg(model, **kw))
+    b0 = m0.prepare(hg)
+    m1 = get_model(_cfg(model, cache_rows=cap, **kw))
+    plan = m1.plan()
+    b1 = m1.prepare(hg)
+    assert "residency" in b1
+    hot = b1["residency"]["hot"]
+    pools = {t: np.concatenate([f, np.asarray(f)[np.asarray(hot[t])]])
+             for t, f in ((t, np.asarray(f))
+                          for t, f in b0["feats"].items()) if t in hot}
+    g0 = list(rsd._iter_gathers(plan, b0))
+    g1 = list(rsd._iter_gathers(plan, b1))
+    assert len(g0) == len(g1) and len(g0) > 0
+    for (t0, i0, _m0), (t1, i1, _m1) in zip(g0, g1):
+        assert t0 == t1
+        direct = np.asarray(b0["feats"][t0])[np.asarray(i0)]
+        cached = pools[t1][np.asarray(i1)]
+        np.testing.assert_array_equal(direct, cached)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), cap=st.integers(1, 40),
+       nd=st.integers(1, 3))
+def test_cached_gather_ops_bit_exact(seed, cap, nd):
+    """The kernels-layer gather (ref and Pallas-interpret) agrees bitwise
+    with a direct take from the extended pool, for 1-3D index tables."""
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(seed)
+    n, d = int(rng.integers(10, 60)), int(rng.integers(4, 24))
+    table = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    c = min(cap, n)
+    hot = jnp.asarray(rng.choice(n, c, replace=False).astype(np.int32))
+    shape = tuple(int(rng.integers(2, 7)) for _ in range(nd))
+    idx = jnp.asarray(rng.integers(0, n + c, shape).astype(np.int32))
+    want = np.asarray(jnp.take(
+        jnp.concatenate([table, jnp.take(table, hot, axis=0)], 0), idx,
+        axis=0))
+    np.testing.assert_array_equal(
+        np.asarray(ref.cached_gather(table, hot, idx)), want)
+    np.testing.assert_array_equal(
+        np.asarray(ops.cached_gather(table, hot, idx, use_pallas=True,
+                                     interpret=True)), want)
+
+
+# ---------------------------------------------------------------------------
+# 2. hot-set selection is the deterministic degree ordering
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), cap=st.integers(0, 80))
+def test_hot_set_degree_ordered_deterministic(seed, cap):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 60))
+    counts = rng.integers(0, 6, n)
+    hot = rsd.hot_set(counts, cap)
+    assert len(hot) == min(cap, n)
+    assert len(set(hot.tolist())) == len(hot)  # no duplicates
+    # slot order is (count desc, id asc) ...
+    key = [(-counts[r], r) for r in hot]
+    assert key == sorted(key)
+    # ... and nothing outside the hot set outranks anything inside it
+    cold = set(range(n)) - set(hot.tolist())
+    if len(hot) and cold:
+        worst = max((-counts[r], r) for r in hot)
+        assert all((-counts[r], r) > worst for r in cold)
+    # same counts -> same hot set (replay determinism)
+    np.testing.assert_array_equal(hot, rsd.hot_set(counts.copy(), cap))
+
+
+# ---------------------------------------------------------------------------
+# 3. live-cache policy: deterministic eviction, pins are inviolable
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), cap=st.integers(0, 12))
+def test_live_cache_deterministic_and_conserving(seed, cap):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 40))
+    deg = rng.integers(0, 8, n)
+    trace = rng.integers(0, n, int(rng.integers(1, 200)))
+    a = rsd.HotRowCache(cap, deg)
+    b = rsd.HotRowCache(cap, deg)
+    a.access_many(trace)
+    b.access_many(trace)
+    assert a.resident == b.resident and a.counters == b.counters
+    c = a.counters
+    assert c["hits"] + c["misses"] == c["rows"] == len(trace)
+    assert len(a.resident) <= a.capacity
+    # every resident row outranks every evicted-or-never-admitted accessed
+    # row, OR was admitted while the cache still had room; the invariant
+    # that must hold exactly: no cold accessed row outranks ALL residents
+    if len(a.resident) == a.capacity and a.capacity > 0:
+        floor = min(a._prio(r) for r in a.resident)
+        cold = set(trace.tolist()) - a.resident
+        assert all(a._prio(r) <= floor for r in cold)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), cap=st.integers(1, 8))
+def test_live_cache_never_evicts_pinned(seed, cap):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, 40))
+    # adversarial degrees: the hammer rows outrank everything pinned
+    deg = rng.integers(0, 4, n)
+    cache = rsd.HotRowCache(cap, deg)
+    pins = rng.choice(n, min(cap, n), replace=False)
+    cache.pin(pins)
+    cache.access_many(pins)  # admit the pinned rows
+    admitted = set(int(r) for r in pins) & cache.resident
+    deg[:] = 100  # every later candidate outranks the pinned residents
+    cache.access_many(rng.integers(0, n, 120))
+    assert admitted <= cache.resident  # pinned rows still resident
+    cache.unpin(pins)
+    cache.access_many(np.arange(n))  # now eviction may touch them
+    assert len(cache.resident) <= cache.capacity
+
+
+def test_live_cache_full_pin_blocks_eviction():
+    deg = np.arange(6)
+    cache = rsd.HotRowCache(2, deg)
+    cache.pin([0, 1])
+    cache.access_many([0, 1])
+    assert cache.resident == {0, 1}
+    cache.access_many([5, 5, 5])  # outranks both, but everything is pinned
+    assert cache.resident == {0, 1} and cache.evictions == 0
+
+
+# ---------------------------------------------------------------------------
+# 4. conservation + determinism of the static batch counters
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), cap=st.integers(1, 32),
+       case=st.sampled_from(LAYOUTS))
+def test_static_counters_conserve_and_replay(seed, cap, case):
+    model, kw = case
+    hg = _rand_hg(seed)
+    m = get_model(_cfg(model, cache_rows=cap, **kw))
+    b = m.prepare(hg)
+    ctr = b["residency"]["counters"]
+    assert ctr["hits"] + ctr["misses"] == ctr["rows"] > 0
+    assert 0 <= ctr["hits"] <= ctr["rows"]
+    # replay: preparing the same graph again reproduces the exact counters
+    b2 = get_model(_cfg(model, cache_rows=cap, **kw)).prepare(hg)
+    assert b2["residency"]["counters"] == ctr
+    # hot sets are per-type degree-ordered top-C of the recount
+    tables = rsd.build_tables(m.plan(), get_model(_cfg(model, **kw)).prepare(hg))
+    for t, hot in b["residency"]["hot"].items():
+        np.testing.assert_array_equal(
+            np.asarray(hot), rsd.hot_set(tables.counts[t], cap))
+
+
+def test_partition_overlay_slots_match_rank():
+    """Partitioned residency: every halo-table entry carrying a cache slot
+    names a hot global vertex, the slot is that vertex's rank, and the
+    counters count exactly the valid halo entries."""
+    hg = _rand_hg(3)
+    m = get_model(_cfg("han", fused=True, cache_rows=6, partitions=3))
+    plan = m.plan()
+    b = m.prepare(hg)
+    res = b["residency"]
+    assert "hot" not in res and "hot_flat" in res
+    part = b["part"]
+    t = plan.target
+    own = np.asarray(part["own"][t]).reshape(-1)
+    slot = np.asarray(res["halo_slot"][t])
+    hs = np.asarray(part["halo_src"][t])
+    hm = np.asarray(part["halo_mask"][t]) > 0
+    # recompute the hot set on the unpartitioned batch
+    tables = rsd.build_tables(plan, get_model(_cfg("han", fused=True)).prepare(hg))
+    rank = tables.rank[t]
+    halo_g = own[hs.reshape(-1)].reshape(hs.shape)
+    np.testing.assert_array_equal(slot, np.where(hm, rank[halo_g], -1))
+    ctr = res["counters"]
+    assert ctr["hits"] == int((slot >= 0).sum())
+    assert ctr["rows"] == int(hm.sum())
+    assert ctr["hits"] + ctr["misses"] == ctr["rows"]
+    # hot rows resolve to owned flat positions that hold the same features
+    hf = np.asarray(res["hot_flat"][t])
+    feats_flat = np.asarray(part["feats"][t]).reshape(
+        (-1,) + np.asarray(part["feats"][t]).shape[2:])
+    np.testing.assert_array_equal(
+        feats_flat[hf], np.asarray(hg.features[t])[tables.hot[t]])

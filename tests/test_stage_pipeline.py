@@ -665,3 +665,122 @@ def test_hgnn_infer_engine_serves_and_characterizes(tiny_hg):
     recs = engine.characterize()
     assert {"FP", "NA", "SA"} <= set(recs)
     assert engine.plan.na.layout == "stacked"
+
+
+# ---------------------------------------------------------------------------
+# hot-feature residency (repro.core.residency): cached == uncached, bitwise
+# ---------------------------------------------------------------------------
+
+# cached-vs-uncached parity is WITHIN one layout, so the bar is exact
+# equality — the cache section holds bitwise row copies and the remapped
+# index tables must reproduce the uncached forward to the last ulp
+CACHED_MATRIX = [
+    ("han", {"fused": False}),
+    ("han", {"fused": True}),
+    ("han", {"fused": True, "layers": 2}),
+    ("han", {"fused": True, "degree_buckets": 3}),
+    ("han", {"fused": True, "degree_buckets": 3, "layers": 2}),
+    ("han", {"fused": True, "fuse_na_sa": True}),
+    ("han", {"fused": True, "fuse_na_sa": True, "layers": 2}),
+    ("han", {"fused": True, "partitions": 4}),
+    ("han", {"fused": True, "partitions": 4, "layers": 2}),
+    ("rgcn", {"fused": False}),
+    ("rgcn", {"fused": True}),
+    ("rgcn", {"fused": True, "layers": 2}),
+    ("rgcn", {"fused": True, "degree_buckets": 3}),
+    ("rgcn", {"fused": True, "partitions": 4}),
+    ("magnn", {}),
+    ("magnn", {"layers": 2}),
+    ("magnn", {"partitions": 4}),
+]
+
+
+@pytest.mark.parametrize(
+    "model,kw", CACHED_MATRIX,
+    ids=[f"{m}-{'_'.join(f'{k}{v}' for k, v in kw.items()) or 'base'}"
+         for m, kw in CACHED_MATRIX])
+def test_cached_forward_bit_exact(tiny_hg, model, kw):
+    m0 = get_model(_cfg(model, **kw))
+    b0 = m0.prepare(tiny_hg)
+    params = m0.init(jax.random.key(0), b0)
+    want = np.asarray(m0.forward(params, b0))
+
+    m1 = get_model(_cfg(model, cache_rows=8, **kw))
+    b1 = m1.prepare(tiny_hg)
+    assert "residency" in b1
+    ctr = b1["residency"]["counters"]
+    assert ctr["hits"] + ctr["misses"] == ctr["rows"] > 0
+    got = np.asarray(m1.forward(params, b1))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_cached_serving_bit_exact(tiny_hg):
+    """Sampled serving with the live cache: the per-step frontier rides the
+    engine-level HotRowCache (accounting only — batch shapes never change),
+    so cached serving returns bitwise the uncached logits and reports
+    residency counters that conserve."""
+    from repro.serve.engine import HGNNRequest, HGNNServeEngine
+    from repro.serve.sampler import HGNNSampler
+
+    outs = []
+    for rows in (0, 8):
+        cfg = _cfg("han", fused=True, fanout=64, cache_rows=rows)
+        m = get_model(cfg)
+        batch = m.prepare(tiny_hg)
+        params = m.init(jax.random.key(0), batch)
+        sampler = HGNNSampler(m.plan(), cfg, tiny_hg)
+        engine = HGNNServeEngine(m.executor, params, sampler, slots=4,
+                                 slot_targets=4)
+        engine.warmup()
+        rng = np.random.default_rng(0)
+        reqs = [HGNNRequest(targets=rng.integers(0, 40, size=5))
+                for _ in range(6)]
+        engine.serve(reqs)
+        st = engine.stats()
+        assert st["compiles_after_warmup"] == 0
+        if rows:
+            rd = st["residency"]
+            assert rd["hits"] + rd["misses"] == rd["rows"] > 0
+            for t, c in rd["per_type"].items():
+                assert c["resident"] <= c["capacity"] <= rows
+        else:
+            assert "residency" not in st
+        outs.append(np.concatenate([r.logits for r in reqs]))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_cached_stage_records_na_bytes_strictly_decrease(tiny_hg):
+    """The headline accounting: with the cache enabled, every NA stage's
+    ``hbm_bytes`` strictly decreases (hits x row_bytes saved; the fill is
+    charged once, at the first cached stage — inter-layer reuse), and the
+    partitioned flow books the savings on the ``gather_halo`` records."""
+    for model, kw, stage_suffix in [
+            ("han", {"fused": True, "layers": 2}, "NA"),
+            ("rgcn", {"fused": False, "layers": 2}, "NA"),
+            ("han", {"fused": True, "layers": 2, "partitions": 4},
+             "gather_halo")]:
+        m0 = get_model(_cfg(model, **kw))
+        b0 = m0.prepare(tiny_hg)
+        params = m0.init(jax.random.key(0), b0)
+        r0 = m0.stage_records(params, b0)
+        m1 = get_model(_cfg(model, cache_rows=12, **kw))
+        b1 = m1.prepare(tiny_hg)
+        r1 = m1.stage_records(params, b1)
+        rr = r1["residency"]
+        assert rr["hits"] > 0
+        assert rr["hit_rate"] == pytest.approx(rr["hits"] / rr["rows"])
+        names = [n for n in r1["stages"] if n.endswith(stage_suffix)]
+        assert len(names) == 2  # one per layer
+        for i, n in enumerate(names):
+            assert (r1["stages"][n]["hbm_bytes"]
+                    < r0["stages"][n]["hbm_bytes"]), (model, n)
+            saved = r1["stages"][n]["residency_bytes_saved"]
+            want = rr["bytes_saved_per_layer"] - (
+                rr["fill_bytes"] if i == 0 else 0)
+            assert saved == want
+        # uncached stages are untouched by the accounting
+        for n in r1["stages"]:
+            if not n.endswith(stage_suffix):
+                assert (r1["stages"][n]["hbm_bytes"]
+                        == r0["stages"][n]["hbm_bytes"]), (model, n)
+        assert r1["total"]["hbm_bytes"] < r0["total"]["hbm_bytes"]
