@@ -29,7 +29,8 @@ from repro.core.pipeline import PlannedModel
 from repro.core.plan import (BUCKETED_BATCH_SPECS, PARTITION_BATCH_SPECS,
                              STACKED_BATCH_SPECS, FPSpec, HeadSpec, LayerPlan,
                              NASpec, PartitionSpec, ResidencySpec, SampleSpec,
-                             SASpec, StagePlan, default_sample_ladder)
+                             SASpec, ScheduleSpec, StagePlan,
+                             default_sample_ladder)
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
@@ -92,6 +93,8 @@ class HAN(PlannedModel):
                          else STACKED_BATCH_SPECS),
             partition=part,
             sample=sample,
+            schedule=(ScheduleSpec(depth=cfg.overlap)
+                      if cfg.overlap >= 1 else None),
         )
 
     # ---------------- Stage 1: Subgraph Build (host) ----------------

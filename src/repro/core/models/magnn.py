@@ -27,7 +27,7 @@ from repro.core.pipeline import PlannedModel
 from repro.core.plan import (INSTANCE_BATCH_SPECS, PARTITION_BATCH_SPECS,
                              FPSpec, HeadSpec, LayerPlan, NASpec,
                              PartitionSpec, ResidencySpec, SampleSpec, SASpec,
-                             StagePlan, default_sample_ladder)
+                             ScheduleSpec, StagePlan, default_sample_ladder)
 from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
 
 
@@ -79,6 +79,8 @@ class MAGNN(PlannedModel):
                          else INSTANCE_BATCH_SPECS),
             partition=part,
             sample=sample,
+            schedule=(ScheduleSpec(depth=cfg.overlap)
+                      if cfg.overlap >= 1 else None),
         )
 
     # ---------------- Stage 1: Subgraph Build (host, sampled instances) -----

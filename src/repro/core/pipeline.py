@@ -68,6 +68,12 @@ class StageGraphExecutor:
     def __init__(self, plan: StagePlan, cfg):
         self.plan = plan
         self.cfg = cfg
+        # per-stage jit cache for the async schedule driver: one traced
+        # callable per stage name, reused across forward_overlapped calls
+        # (shapes key jax.jit's own cache below it)
+        self._ov_jit: Dict = {}
+        # last forward_overlapped dispatch trace (tests / accounting)
+        self.last_dispatch: Dict = {}
 
     # ------------------------------------------------------------------
     # params
@@ -256,11 +262,12 @@ class StageGraphExecutor:
     # ------------------------------------------------------------------
     # partitioned flow: the halo feature exchange (the new explicit stage)
     # ------------------------------------------------------------------
-    def gather_halo(self, batch: Dict, h_own: Dict):
-        """Fetch each type's halo rows from the other partitions' owned
-        tables and append them: local source table = concat(own, halo).
-        The one communication step of the partitioned flow (shard_map
-        all-gather on a dividing mesh; see ``repro.dist.partition``)."""
+    def halo_exchange(self, batch: Dict, h_own: Dict) -> Dict:
+        """Exchange-only half of :meth:`gather_halo`: fetch each type's
+        halo rows from the other partitions' owned tables — WITHOUT
+        appending them to the local pool.  The async schedule dispatches
+        this concurrently with NA's owned-rows pre-gather (both depend
+        only on FP); the serial path concatenates right below."""
         from repro.dist.partition import gather_halo as _gather
 
         part = batch["part"]
@@ -281,8 +288,17 @@ class StageGraphExecutor:
                 sel = jnp.take(cache, jnp.clip(slot, 0), axis=0)
                 cond = (slot >= 0).reshape(slot.shape + (1,) * len(tail))
                 halo = jnp.where(cond, sel, halo)
-            out[t] = jnp.concatenate([h, halo], axis=1)
+            out[t] = halo
         return out
+
+    def gather_halo(self, batch: Dict, h_own: Dict):
+        """Fetch each type's halo rows from the other partitions' owned
+        tables and append them: local source table = concat(own, halo).
+        The one communication step of the partitioned flow (shard_map
+        all-gather on a dividing mesh; see ``repro.dist.partition``)."""
+        halos = self.halo_exchange(batch, h_own)
+        return {t: jnp.concatenate([h, halos[t]], axis=1)
+                for t, h in h_own.items()}
 
     # ------------------------------------------------------------------
     # Stage 3: Neighbor Aggregation
@@ -423,51 +439,81 @@ class StageGraphExecutor:
             out["|".join(key)] = agg @ params["w_rel"][key]
         return out
 
-    def _na_instance(self, params: Dict, batch: Dict, h: Dict[str, jax.Array]):
+    def _na_instance_one(self, params: Dict, batch: Dict,
+                         h: Dict[str, jax.Array], i_path: int) -> jax.Array:
+        """One metapath's instance-attention NA — the serial loop body and
+        the async schedule's per-metapath stage share it verbatim."""
         plan, cfg = self.plan, self.cfg
         specs = stages.HGNN_STAGE_SPECS
         H = cfg.n_heads
         act = _ACT[plan.na.activation]
         res = batch.get("residency")
         hot = res["hot"] if res is not None and "hot" in res else {}
-        outs: List[jax.Array] = []
-        for p_i, (nodes, mask), types in zip(params["att"],
-                                             batch["instances"],
-                                             plan.metapaths):
-            nodes = stages.shard(nodes, *specs["na_inst_nodes"])
-            mask = stages.shard(mask, *specs["na_nbr"])
-            n, i, l = nodes.shape
+        p_i = params["att"][i_path]
+        nodes, mask = batch["instances"][i_path]
+        types = plan.metapaths[i_path]
+        nodes = stages.shard(nodes, *specs["na_inst_nodes"])
+        mask = stages.shard(mask, *specs["na_nbr"])
+        n, i, l = nodes.shape
 
-            # gather projected features per path position (types are static,
-            # carried by the plan); the residency arm serves the remapped
-            # instance tables through the VMEM-resident cache gather
-            def gather(j):
-                ty = types[j]
-                if ty in hot:
-                    return _kops().cached_gather(
-                        h[ty], hot[ty], nodes[:, :, j],
-                        use_pallas=plan.na.use_pallas)
-                return h[ty][nodes[:, :, j]]
+        # gather projected features per path position (types are static,
+        # carried by the plan); the residency arm serves the remapped
+        # instance tables through the VMEM-resident cache gather
+        def gather(j):
+            ty = types[j]
+            if ty in hot:
+                return _kops().cached_gather(
+                    h[ty], hot[ty], nodes[:, :, j],
+                    use_pallas=plan.na.use_pallas)
+            return h[ty][nodes[:, :, j]]
 
-            h_path = jnp.stack(
-                [gather(j) for j in range(l)], axis=2
-            )  # [N, I, L, D]
-            h_path = h_path.reshape(n, i, l, H, -1)
-            enc = stages.rotate_encoder(h_path)  # [N, I, H, Dh]
-            h_tgt = h[plan.target].reshape(-1, H, h_path.shape[-1])
-            if plan.na.use_pallas:
-                # Instance attention IS padded GAT NA with the encoded
-                # instances as the source pool (arange neighbor grid).
-                kops = _kops()
-                flat = enc.reshape(n * i, H, enc.shape[-1])
-                nbr_inst = jnp.arange(n * i, dtype=jnp.int32).reshape(n, i)
-                z = kops.gat_aggregate(p_i, h_tgt, flat, nbr_inst, mask,
-                                       use_pallas=True)
-            else:
-                z = stages.instance_aggregate(p_i, h_tgt, enc, mask)
-            z = act(z).reshape(n, -1)
-            outs.append(stages.shard(z, *specs["na_flat_out"]))  # [N, D]
-        return outs
+        h_path = jnp.stack(
+            [gather(j) for j in range(l)], axis=2
+        )  # [N, I, L, D]
+        h_path = h_path.reshape(n, i, l, H, -1)
+        enc = stages.rotate_encoder(h_path)  # [N, I, H, Dh]
+        h_tgt = h[plan.target].reshape(-1, H, h_path.shape[-1])
+        if plan.na.use_pallas:
+            # Instance attention IS padded GAT NA with the encoded
+            # instances as the source pool (arange neighbor grid).
+            kops = _kops()
+            flat = enc.reshape(n * i, H, enc.shape[-1])
+            nbr_inst = jnp.arange(n * i, dtype=jnp.int32).reshape(n, i)
+            z = kops.gat_aggregate(p_i, h_tgt, flat, nbr_inst, mask,
+                                   use_pallas=True)
+        else:
+            z = stages.instance_aggregate(p_i, h_tgt, enc, mask)
+        z = act(z).reshape(n, -1)
+        return stages.shard(z, *specs["na_flat_out"])  # [N, D]
+
+    def _na_instance(self, params: Dict, batch: Dict, h: Dict[str, jax.Array]):
+        return [self._na_instance_one(params, batch, h, i)
+                for i in range(len(self.plan.metapaths))]
+
+    def _na_metapath(self, params: Dict, batch: Dict, h, i: int):
+        """One metapath's NA as its own schedulable stage (async schedule,
+        single-device): the bucketed / csr GAT loop body or one MAGNN
+        instance-attention round.  The only delta vs the serial loop is
+        *where* the activation applies — per-metapath here vs post-stack
+        there — which is elementwise, so SA's re-stack is bitwise equal."""
+        plan = self.plan
+        act = _ACT[plan.na.activation]
+        if plan.na.kind == "instance":
+            return self._na_instance_one(params, batch, h, i)
+        pool = self._res_pool(batch, plan.target, h)
+        if plan.na.layout == "csr":
+            seg, idx = batch["edges"][i]
+            z = stages.gat_aggregate_csr(params["gat"][i], h, pool, seg, idx,
+                                         h.shape[0])
+            return act(z).reshape(z.shape[0], -1)  # [N, D]
+        agg_fn = None
+        if plan.na.use_pallas:
+            kops = _kops()
+            agg_fn = lambda p, hd, hs, nn, mm: kops.gat_aggregate(
+                p, hd, hs, nn, mm, use_pallas=True)
+        z = stages.gat_aggregate_bucketed(params["gat"][i], h, pool,
+                                          batch["buckets"][i], agg_fn=agg_fn)
+        return act(z).reshape(z.shape[0], -1)  # [N, D]
 
     def _na_partitioned(self, params: Dict, batch: Dict, h_loc: Dict):
         """NA over partition-local shards: destinations are the owned rows,
@@ -533,6 +579,140 @@ class StageGraphExecutor:
             return outs
         raise ValueError(
             f"no partitioned NA path for kind {plan.na.kind!r}")
+
+    # ------------------------------------------------------------------
+    # partitioned flow, async schedule: the own/halo NA split.
+    #
+    # Serial partitioned NA gathers from concat(own, halo) — it cannot
+    # start until the exchange lands.  But a gather is a pure row
+    # selection, so it splits at the *gather*, never at a float
+    # reduction: the owned-side rows (and the per-row source attention
+    # scores, which are row-local EW math) pre-gather against the owned
+    # table alone while the exchange is still in flight, and the merge
+    # where-selects the halo side in afterwards (stages.gather_own /
+    # gather_merge — bitwise equal to the concat-then-gather).  All the
+    # attention / mean arithmetic runs once, in the merge, on the merged
+    # operands — identical values in identical reduction order.
+    # ------------------------------------------------------------------
+    def _na_partitioned_own(self, params: Dict, batch: Dict, h_own: Dict):
+        """Owned-rows pre-gather pass: everything partitioned NA can do
+        from FP's output alone (depends only on FP — runs concurrently
+        with ``halo_exchange``).  Returns the pre-gathered operand pytree
+        :meth:`_na_partitioned_merge` consumes."""
+        plan, cfg = self.plan, self.cfg
+        part = batch["part"]
+        t = plan.target
+        H = cfg.n_heads
+        if plan.na.kind == "gat":
+            heads = lambda x: x.reshape(x.shape[0], x.shape[1], H, -1)
+            hs_own = heads(h_own[t])  # [K, n, H, Dh]
+
+            def one_part(hs_k, nbr_k):  # nbr_k [P, n, Kd]
+                def one_path(pp, nn):
+                    e_tab = (hs_k * pp["a_src"]).sum(-1)  # [n, H] EW
+                    return (stages.gather_own(hs_k, nn),
+                            stages.gather_own(e_tab, nn))
+
+                return jax.vmap(one_path)(params["gat"], nbr_k)
+
+            hn_own, e_own = jax.vmap(one_part)(hs_own, part["nbr"])
+            return {"hn": hn_own,  # [K, P, n, Kd, H, Dh]
+                    "e": e_own}  # [K, P, n, Kd, H]
+        if plan.na.kind == "mean":
+            out: Dict = {}
+            for key in sorted(part["rels"]):
+                nbr, _ = part["rels"][key]
+                out["|".join(key)] = jax.vmap(stages.gather_own)(
+                    h_own[key[0]], nbr)  # [K, n_d, Kd, D]
+            return out
+        if plan.na.kind == "instance":
+            outs: List = []
+            for (nodes, _), types in zip(part["instances"], plan.metapaths):
+                outs.append([
+                    jax.vmap(stages.gather_own)(
+                        h_own[types[j]], nodes[:, :, :, j])
+                    for j in range(nodes.shape[3])
+                ])  # per position: [K, n, I, D]
+            return outs
+        raise ValueError(
+            f"no partitioned NA split for kind {plan.na.kind!r}")
+
+    def _na_partitioned_merge(self, params: Dict, batch: Dict, h_own: Dict,
+                              halos: Dict, pre):
+        """Merge pass: where-select the exchanged halo rows into the
+        pre-gathered owned operands, then run the untouched aggregation
+        math.  Output bitwise equals ``_na_partitioned(params, batch,
+        gather_halo(batch, h_own))``."""
+        plan, cfg = self.plan, self.cfg
+        part = batch["part"]
+        t = plan.target
+        act = _ACT[plan.na.activation]
+        H = cfg.n_heads
+        if plan.na.kind == "gat":
+            n_own = part["feats"][t].shape[1]
+            heads = lambda x: x.reshape(x.shape[0], x.shape[1], H, -1)
+            hd = heads(h_own[t])  # [K, n, H, Dh] owned rows ARE the dsts
+            hs_halo = heads(halos[t])  # [K, h_max, H, Dh]
+
+            def one_part(hd_k, hh_k, nbr_k, mask_k, hno_k, eo_k):
+                def one_path(pp, nn, mm, hno, eo):
+                    hn = stages.gather_merge(hno, hh_k, nn, n_own)
+                    e_tab_h = (hh_k * pp["a_src"]).sum(-1)  # [h_max, H]
+                    e_nbr = stages.gather_merge(eo, e_tab_h, nn, n_own)
+                    return stages.gat_aggregate_padded(
+                        pp, hd_k, None, None, mm, hn=hn, e_nbr=e_nbr)
+
+                return jax.vmap(one_path)(params["gat"], nbr_k, mask_k,
+                                          hno_k, eo_k)
+
+            z = jax.vmap(one_part)(hd, hs_halo, part["nbr"], part["mask"],
+                                   pre["hn"], pre["e"])
+            z = act(z)  # [K, P, n, H, Dh]
+            z = z.reshape(z.shape[0], z.shape[1], z.shape[2], -1)
+            return stages.shard(z, BATCH, None, None, None)  # [K, P, n, D]
+        if plan.na.kind == "mean":
+            if plan.n_layers > 1:
+                out: Dict = {"__h__": {ty: h_own[ty]
+                                       for ty in part["feats"]}}
+            else:
+                out = {"__h__": h_own[t]}
+            for key in sorted(part["rels"]):
+                s = key[0]
+                n_own_s = part["feats"][s].shape[1]
+                nbr, mask = part["rels"][key]
+                hn = jax.vmap(
+                    lambda ho, hl, nn: stages.gather_merge(
+                        ho, hl, nn, n_own_s)
+                )(pre["|".join(key)], halos[s], nbr)
+                agg = jax.vmap(
+                    lambda nn, mm, hh: stages.mean_aggregate_padded(
+                        None, nn, mm, hn=hh)
+                )(nbr, mask, hn)  # [K, n_d, D]
+                out["|".join(key)] = agg @ params["w_rel"][key]
+            return out
+        if plan.na.kind == "instance":
+            h_tgt = h_own[t]
+            h_tgt = h_tgt.reshape(h_tgt.shape[0], h_tgt.shape[1], H, -1)
+            outs: List[jax.Array] = []
+            for p_i, (nodes, mask), types, pre_i in zip(params["att"],
+                                                        part["instances"],
+                                                        plan.metapaths, pre):
+                k_, n, i, l = nodes.shape
+                h_path = jnp.stack([
+                    jax.vmap(
+                        lambda ho, hl, nn, ty=types[j]: stages.gather_merge(
+                            ho, hl, nn, part["feats"][ty].shape[1])
+                    )(pre_i[j], halos[types[j]], nodes[:, :, :, j])
+                    for j in range(l)
+                ], axis=3)  # [K, n, I, L, D]
+                h_path = h_path.reshape(k_, n, i, l, H, -1)
+                enc = jax.vmap(stages.rotate_encoder)(h_path)
+                z = jax.vmap(stages.instance_aggregate,
+                             in_axes=(None, 0, 0, 0))(p_i, h_tgt, enc, mask)
+                outs.append(act(z).reshape(k_, n, -1))  # [K, n, D]
+            return outs
+        raise ValueError(
+            f"no partitioned NA split for kind {plan.na.kind!r}")
 
     # ------------------------------------------------------------------
     # Stage 4: Semantic Aggregation
@@ -648,6 +828,205 @@ class StageGraphExecutor:
         return self.head(params, out, batch)
 
     # ------------------------------------------------------------------
+    # the async stage-graph schedule (plan.schedule)
+    # ------------------------------------------------------------------
+    def _split_halo(self) -> bool:
+        """Does the schedule split partitioned NA into own/halo passes?"""
+        s = self.plan.schedule
+        return (s is not None and s.overlap_halo
+                and self.plan.partition is not None)
+
+    def _split_metapaths(self) -> bool:
+        """Does the schedule dispatch per-metapath NA stages?  Only where
+        the serial path already loops metapaths (bucketed / csr GAT,
+        MAGNN instances) — the stacked layout is ONE launch by design,
+        and a single metapath has nothing to overlap."""
+        plan, s = self.plan, self.plan.schedule
+        return (s is not None and s.overlap_metapaths
+                and plan.partition is None
+                and len(plan.metapaths) > 1
+                and ((plan.na.kind == "gat"
+                      and plan.na.layout in ("csr", "bucketed"))
+                     or plan.na.kind == "instance"))
+
+    def _sa_entry(self, p_l: Dict, batch: Dict, z):
+        """SA entry for the schedule driver: per-metapath NA stages hand
+        SA a list; stacked-SA plans re-stack it here.  Activation already
+        applied per metapath (elementwise) — stack-after-act is bitwise
+        equal to the serial act-after-stack."""
+        if self._split_metapaths() and self.plan.sa.stacked:
+            z = jnp.stack(z)  # [P, N, D]
+        return self.sa(p_l, batch, z)
+
+    def schedule_edges(self) -> Dict[str, Tuple[str, ...]]:
+        """The plan-derived dependency-edge table: stage name → the stages
+        it must wait for, in topological order.  Purely declarative — the
+        driver, the accounting, and the tests all read the same DAG.
+        Nodes match the schedule's dispatch granularity: the partitioned
+        split runs ``gather_halo`` (exchange only) and ``NA.own``
+        concurrently, merging in ``NA``; the metapath split fans ``FP``
+        out into ``NA.p{i}`` stages that join at ``SA``."""
+        plan = self.plan
+        edges: Dict[str, Tuple[str, ...]] = {}
+        prev = None
+        for l in range(plan.n_layers):
+            pre = f"L{l + 1}." if plan.n_layers > 1 else ""
+            edges[pre + "FP"] = (prev,) if prev else ()
+            if plan.partition is not None:
+                edges[pre + "gather_halo"] = (pre + "FP",)
+                if self._split_halo():
+                    edges[pre + "NA.own"] = (pre + "FP",)
+                    edges[pre + "NA"] = (pre + "NA.own", pre + "gather_halo")
+                else:
+                    edges[pre + "NA"] = (pre + "gather_halo",)
+                sa_deps: Tuple[str, ...] = (pre + "NA",)
+            elif self._split_metapaths():
+                names = [pre + f"NA.p{i}"
+                         for i in range(len(plan.metapaths))]
+                for nm in names:
+                    edges[nm] = (pre + "FP",)
+                sa_deps = tuple(names)
+            else:
+                edges[pre + "NA"] = (pre + "FP",)
+                sa_deps = (pre + "NA",)
+            edges[pre + "SA"] = sa_deps
+            prev = pre + "SA"
+        edges["head"] = (prev,)
+        return edges
+
+    def overlap_record(self) -> Dict:
+        """Deterministic schedule counters (no walls): DAG size and the
+        path-independent stage pairs — the concurrency the schedule can
+        exploit.  Pinned by CI greps and gated at exact equality by the
+        bench; the measured critical-path/exposure accounting lives in
+        ``characterize.overlap_accounting``."""
+        edges = self.schedule_edges()
+        names = list(edges)
+        anc: Dict[str, set] = {}
+        for n in names:  # topological by construction
+            a = set()
+            for d in edges[n]:
+                a.add(d)
+                a |= anc[d]
+            anc[n] = a
+        pairs = [(a, b) for i, a in enumerate(names) for b in names[i + 1:]
+                 if a not in anc[b] and b not in anc[a]]
+        sched = self.plan.schedule
+        return {
+            "depth": sched.depth if sched is not None else 1,
+            "stages": len(names),
+            "edges": sum(len(d) for d in edges.values()),
+            "concurrent_pairs": len(pairs),
+            "overlapped_stages": len({s for p in pairs for s in p}),
+            "pairs": [f"{a}|{b}" for a, b in pairs],
+        }
+
+    def _ovjit(self, key: str, fn):
+        f = self._ov_jit.get(key)
+        if f is None:
+            f = self._ov_jit[key] = jax.jit(fn)
+        return f
+
+    def _walk_schedule(self, params: Dict, batch: Dict, emit):
+        """Walk the stage DAG in topological order, dispatching each stage
+        through ``emit(name, key, fn, args) -> value``.  ``name`` is the
+        per-layer stage name (matches :meth:`schedule_edges`); ``key`` the
+        jit-cache identity (layer-indexed — stage shapes repeat across
+        calls, not across layers with different param trees).  Both the
+        async driver and the characterization hook walk this one graph."""
+        plan = self.plan
+        n_l = plan.n_layers
+        state = out = None
+        for l, lp in enumerate(plan.layers):
+            pre = f"L{l + 1}." if n_l > 1 else ""
+            if l == 0:
+                h = emit(pre + "FP", "FP0",
+                         lambda p, b: self.fp(p, b), (params, batch))
+            else:
+                h = emit(pre + "FP", f"FP{l}",
+                         lambda p, s, lp=lp, l=l: self._fp_hidden(
+                             lp, self._layer_params(p, l), s),
+                         (params, state))
+            if plan.partition is not None:
+                if self._split_halo():
+                    # the exchange and the owned-rows pre-gather both
+                    # depend only on FP — the window dispatches them
+                    # back-to-back and they run concurrently
+                    halos = emit(pre + "gather_halo", "halo_exchange",
+                                 lambda b, hh: self.halo_exchange(b, hh),
+                                 (batch, h))
+                    pre_g = emit(pre + "NA.own", f"NA.own{l}",
+                                 lambda p, b, hh, l=l:
+                                 self._na_partitioned_own(
+                                     self._layer_params(p, l), b, hh),
+                                 (params, batch, h))
+                    z = emit(pre + "NA", f"NA.merge{l}",
+                             lambda p, b, hh, ha, pg, l=l:
+                             self._na_partitioned_merge(
+                                 self._layer_params(p, l), b, hh, ha, pg),
+                             (params, batch, h, halos, pre_g))
+                else:
+                    h = emit(pre + "gather_halo", "gather_halo",
+                             lambda b, hh: self.gather_halo(b, hh),
+                             (batch, h))
+                    z = emit(pre + "NA", f"NA{l}",
+                             lambda p, b, hh, l=l: self.na(
+                                 self._layer_params(p, l), b, hh),
+                             (params, batch, h))
+            elif self._split_metapaths():
+                z = [emit(pre + f"NA.p{i}", f"NA.p{l}.{i}",
+                          lambda p, b, hh, l=l, i=i: self._na_metapath(
+                              self._layer_params(p, l), b, hh, i),
+                          (params, batch, h))
+                     for i in range(len(plan.metapaths))]
+            else:
+                z = emit(pre + "NA", f"NA{l}",
+                         lambda p, b, hh, l=l: self.na(
+                             self._layer_params(p, l), b, hh),
+                         (params, batch, h))
+            out = emit(pre + "SA", f"SA{l}",
+                       lambda p, b, zz, l=l: self._sa_entry(
+                           self._layer_params(p, l), b, zz),
+                       (params, batch, z))
+            if l + 1 < n_l:
+                # host-level repackaging (slices are identities on the
+                # own-only tables) — not a schedulable stage
+                state = self._handoff(lp, batch, h, out)
+        return emit("head", "head",
+                    lambda p, b, oo: self.head(p, oo, b),
+                    (params, batch, out))
+
+    def forward_overlapped(self, params: Dict, batch: Dict) -> jax.Array:
+        """``forward``'s layer loop re-expressed over the plan-derived
+        stage DAG: each stage is its own jitted call; the host races ahead
+        issuing dependents and blocks only when more than
+        ``plan.schedule.depth`` stage results are in flight
+        (``kernels.streaming.InflightWindow`` — the DMA double-buffer
+        discipline at stage granularity), so JAX's async dispatch runs
+        independent stages' device work concurrently.  Bit-exact vs the
+        serial schedule: the split stages are pure row selections /
+        elementwise rearrangements; depth=1 degrades to fully blocking
+        dispatch.  Not itself jit-able (it *is* the dispatcher); the
+        per-stage jits are cached on the executor, so repeated calls
+        re-trace nothing."""
+        from repro.kernels.streaming import InflightWindow
+
+        sched = self.plan.schedule
+        win = InflightWindow(sched.depth if sched is not None else 1)
+
+        def emit(name, key, fn, args):
+            return win.admit(name, self._ovjit(key, fn)(*args))
+
+        out = self._walk_schedule(params, batch, emit)
+        win.drain()
+        self.last_dispatch = {
+            "dispatched": list(win.admitted),
+            "max_inflight": win.max_inflight,
+            "depth": win.depth,
+        }
+        return out
+
+    # ------------------------------------------------------------------
     # per-stage characterization hooks
     # ------------------------------------------------------------------
     def stage_fns(self, params: Dict, batch: Dict) -> Dict[str, Tuple]:
@@ -693,6 +1072,22 @@ class StageGraphExecutor:
                 state = self._handoff(lp, batch, h, out)
         head = jax.jit(lambda p, oo: self.head(p, oo, batch))
         fns["head"] = (head, (params, out))
+        return fns
+
+    def overlap_stage_fns(self, params: Dict, batch: Dict) -> Dict[str, Tuple]:
+        """Overlap-granular analogue of :meth:`stage_fns`: one jitted
+        callable per node of :meth:`schedule_edges`, chained on concrete
+        intermediates.  The benches time each stage's wall and feed the
+        DAG + walls to ``characterize.overlap_accounting`` (critical-path
+        vs serial-sum, per-stage exposure)."""
+        fns: Dict[str, Tuple] = {}
+
+        def emit(name, key, fn, args):
+            f = jax.jit(fn)
+            fns[name] = (f, args)
+            return f(*args)
+
+        self._walk_schedule(params, batch, emit)
         return fns
 
     def stage_records(self, params: Dict, batch: Dict,
@@ -754,6 +1149,11 @@ class StageGraphExecutor:
         out = {"stages": recs, "total": total}
         if rr is not None:
             out["residency"] = rr
+        if self.plan.schedule is not None:
+            # schedule accounting: the DAG's deterministic counters (the
+            # measured critical-path walls ride the overlap bench, not the
+            # HLO records)
+            out["overlap"] = self.overlap_record()
         gh_names = [n for n in fns if n.endswith("gather_halo")]
         if gh_names:
             # the communication stage's paper-facing metrics: exchanged halo
@@ -838,6 +1238,9 @@ class PlannedModel:
 
     def forward(self, params: Dict, batch: Dict) -> jax.Array:
         return self.executor.forward(params, batch)
+
+    def forward_overlapped(self, params: Dict, batch: Dict) -> jax.Array:
+        return self.executor.forward_overlapped(params, batch)
 
     def stage_records(self, params: Dict, batch: Dict, n_chips: int = 1):
         return self.executor.stage_records(params, batch, n_chips=n_chips)

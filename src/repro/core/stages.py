@@ -103,15 +103,26 @@ def _leaky_relu(x, slope=0.2):
 def gat_aggregate_padded(
     p: Dict[str, jax.Array],
     h_dst: jax.Array,  # [N, H, Dh] projected features of target nodes
-    h_src: jax.Array,  # [M, H, Dh] projected features of neighbor pool
-    nbr: jax.Array,  # [N, K] int32
+    h_src: Optional[jax.Array],  # [M, H, Dh] projected neighbor pool
+    nbr: jax.Array,  # [N, K] int32 (may be None when hn/e_nbr pre-gathered)
     mask: jax.Array,  # [N, K] float
+    hn: Optional[jax.Array] = None,  # [N, K, H, Dh] pre-gathered neighbors
+    e_nbr: Optional[jax.Array] = None,  # [N, K, H] pre-gathered src scores
 ) -> jax.Array:
-    """GAT neighbor aggregation over a padded subgraph. Returns [N, H, Dh]."""
+    """GAT neighbor aggregation over a padded subgraph. Returns [N, H, Dh].
+
+    ``hn`` / ``e_nbr`` let the async schedule's split stages supply the two
+    TB gathers pre-merged (owned rows gathered while the halo exchange was
+    still in flight, where-selected against the halo rows afterwards) —
+    pure row selections, so the attention math below is bitwise identical
+    to the gather-from-``h_src`` default.
+    """
     e_dst = (h_dst * p["a_dst"]).sum(-1)  # [N, H]   EW
-    e_src_all = (h_src * p["a_src"]).sum(-1)  # [M, H]   EW
-    hn = h_src[nbr]  # [N, K, H, Dh]  TB gather
-    e = _leaky_relu(e_dst[:, None, :] + e_src_all[nbr])  # [N, K, H]
+    if hn is None:
+        hn = h_src[nbr]  # [N, K, H, Dh]  TB gather
+    if e_nbr is None:
+        e_nbr = (h_src * p["a_src"]).sum(-1)[nbr]  # [M, H] EW -> [N, K, H]
+    e = _leaky_relu(e_dst[:, None, :] + e_nbr)  # [N, K, H]
     e = jnp.where(mask[..., None] > 0, e, -1e9)
     e = e - jax.lax.stop_gradient(e.max(axis=1, keepdims=True))
     w = jnp.exp(e) * mask[..., None]
@@ -212,12 +223,44 @@ def gat_aggregate_bucketed(
     return shard(out, *HGNN_STAGE_SPECS["na_out"])
 
 
-def mean_aggregate_padded(h_src: jax.Array, nbr: jax.Array, mask: jax.Array) -> jax.Array:
-    """Mean NA (RGCN). h_src [M, D] -> [N, D]."""
-    hn = h_src[nbr]  # [N, K, D]
+def mean_aggregate_padded(
+    h_src: Optional[jax.Array], nbr: jax.Array, mask: jax.Array,
+    hn: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Mean NA (RGCN). h_src [M, D] -> [N, D].  ``hn`` supplies the gather
+    pre-merged (async schedule's own/halo split) — same rows, same sum."""
+    if hn is None:
+        hn = h_src[nbr]  # [N, K, D]
     s = (hn * mask[..., None]).sum(axis=1)
     d = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
     return s / d
+
+
+def gather_own(own: jax.Array, idx: jax.Array) -> jax.Array:
+    """Owned-side half of a split own/halo gather (see :func:`gather_merge`).
+
+    Indices pointing past the owned table clip to its last row; the merge
+    discards those lanes in favour of the halo side, so the clip value
+    never reaches the output.  Depends only on the owned table — the async
+    schedule dispatches it while the halo exchange is still in flight.
+    """
+    return own[jnp.clip(idx, 0, own.shape[0] - 1)]
+
+
+def gather_merge(
+    own_sel: jax.Array,  # gather_own(own, idx)
+    halo: jax.Array,  # [h_max, ...] exchanged halo rows (h_max may be 0)
+    idx: jax.Array,  # indices into the virtual concat([own, halo]) table
+    n_own: int,
+) -> jax.Array:
+    """Merge the split gather: ``concat([own, halo])[idx]`` as a where-select
+    of the two clipped row selections.  Pure row copies — bitwise equal to
+    gathering from the materialized concatenation."""
+    if halo.shape[0] == 0:
+        return own_sel
+    halo_sel = halo[jnp.clip(idx - n_own, 0, halo.shape[0] - 1)]
+    cond = (idx < n_own).reshape(idx.shape + (1,) * (halo.ndim - 1))
+    return jnp.where(cond, own_sel, halo_sel)
 
 
 def mean_aggregate_padded_sharded(

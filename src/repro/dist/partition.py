@@ -139,10 +139,16 @@ class TypePartition:
                 + self.local.astype(np.int64))
 
 
-def build_type_partition(owner: np.ndarray, k: int) -> TypePartition:
+def build_type_partition(owner: np.ndarray, k: int,
+                         pad_to: int = 0) -> TypePartition:
+    """``pad_to`` raises ``n_max`` to an assignment-independent capacity
+    (``ceil(n / k)``, the partitioner's hard load cap) so static-shape plans
+    get owned tables whose shape is a pure function of ``(n, k)``.  Pad rows
+    carry ``own_mask = 0`` and zero features, so they are numerically inert —
+    the inverse permutation never reads them."""
     n = len(owner)
     sizes = np.bincount(owner, minlength=k) if n else np.zeros(k, np.int64)
-    n_max = max(int(sizes.max()) if n else 0, 1)
+    n_max = max(int(sizes.max()) if n else 0, 1, int(pad_to))
     own = np.zeros((k, n_max), np.int32)
     own_mask = np.zeros((k, n_max), np.float32)
     local = np.zeros(n, np.int32)
@@ -155,15 +161,20 @@ def build_type_partition(owner: np.ndarray, k: int) -> TypePartition:
 
 
 def build_halo(tp: TypePartition, referenced: Sequence[np.ndarray],
-               k: int) -> Tuple[np.ndarray, np.ndarray, List[np.ndarray]]:
+               k: int, pad_to: int = 0
+               ) -> Tuple[np.ndarray, np.ndarray, List[np.ndarray]]:
     """Halo index maps for one type: per partition, the non-owned vertices it
     reads, padded to ``[K, H_max]`` *flat own-order* indices + mask.  Also
-    returns the raw per-partition halo id lists (relabeling needs them)."""
+    returns the raw per-partition halo id lists (relabeling needs them).
+    ``pad_to`` raises ``H_max`` to an assignment-independent capacity (the
+    type's vertex count — no partition can reference more non-owned rows)
+    for static-shape plans; pad entries carry ``halo_mask = 0`` and point at
+    flat index 0, and no relabeled neighbor table ever addresses them."""
     halos: List[np.ndarray] = []
     for j in range(k):
         refs = np.unique(referenced[j]).astype(np.int64)
         halos.append(refs[tp.owner[refs] != j])
-    h_max = max((len(h) for h in halos), default=0)
+    h_max = max(max((len(h) for h in halos), default=0), int(pad_to))
     halo_src = np.zeros((k, h_max), np.int32)
     halo_mask = np.zeros((k, h_max), np.float32)
     for j, hj in enumerate(halos):
@@ -267,12 +278,31 @@ def _part_feats(feats: np.ndarray, tp: TypePartition) -> np.ndarray:
     return (feats[tp.own] * tp.own_mask[..., None]).astype(feats.dtype)
 
 
+def _static_pads(plan, counts: Dict[str, int], k: int):
+    """Per-type ``(n_pad, h_pad)`` capacities for ``static_shapes`` plans.
+
+    ``n_pad[ty] = ceil(n_ty / k)`` (the assignment cap every partitioner
+    obeys) and ``h_pad[ty] = n_ty`` (no partition can reference more
+    non-owned rows than the type has), so every partitioned table shape is a
+    pure function of the *unpartitioned* batch shapes and ``k``.  Sampled
+    serving pads each rung's batch to rung-fixed caps, so with these pads the
+    per-step re-partition stops choosing data-dependent halo widths and the
+    warmed jit cache covers every step (``compiles_after_warmup == 0``).
+    Returns ``({}, {})`` — dynamic minimal shapes — for non-static plans.
+    """
+    if plan.partition is None or not plan.partition.static_shapes:
+        return {}, {}
+    return ({ty: max(-(-int(c) // k), 1) for ty, c in counts.items()},
+            {ty: int(c) for ty, c in counts.items()})
+
+
 EdgeLists = Dict[str, List[Tuple[np.ndarray, np.ndarray]]]
 
 
 def _source_partitions(
     tp_t: TypePartition, edge_lists: EdgeLists, counts: Dict[str, int],
     k: int, tps: Dict[str, TypePartition],
+    pads: Tuple[Dict[str, int], Dict[str, int]] = ({}, {}),
 ) -> Tuple[Dict, Dict, Dict, int, int]:
     """The shared middle of every layout's partitioning: assign each gathered
     source type, build its halo tables and relabeling LUTs, count the cut.
@@ -283,6 +313,7 @@ def _source_partitions(
     reference-majority assigned.  Returns per-type ``(halo_src, halo_mask,
     luts)`` plus the ``(cut_edges, edges_total)`` counters.
     """
+    n_pad, h_pad = pads
     halo_src: Dict[str, np.ndarray] = {}
     halo_mask: Dict[str, np.ndarray] = {}
     luts: Dict[str, np.ndarray] = {}
@@ -293,13 +324,15 @@ def _source_partitions(
             votes = np.zeros((counts[s], k), np.float64)
             for dst, src in pairs:
                 np.add.at(votes, (src, tp_t.owner[dst]), 1.0)
-            tps[s] = build_type_partition(reference_assign(votes, k), k)
+            tps[s] = build_type_partition(reference_assign(votes, k), k,
+                                          pad_to=n_pad.get(s, 0))
         referenced = []
         for j in range(k):
             ids = [src[tp_t.owner[dst] == j] for dst, src in pairs]
             referenced.append(np.unique(np.concatenate(ids)) if ids
                               else np.zeros(0, np.int64))
-        hs, hm, halos = build_halo(tps[s], referenced, k)
+        hs, hm, halos = build_halo(tps[s], referenced, k,
+                                   pad_to=h_pad.get(s, 0))
         halo_src[s], halo_mask[s] = hs, hm
         luts[s] = local_lut(tps[s], halos, k)
         for dst, src in pairs:
@@ -335,11 +368,13 @@ def _partition_stacked(plan, batch: Dict, k: int) -> Dict:
     t = plan.target
     valid = mask > 0
     neigh = [np.unique(nbr[:, v][valid[:, v]]) for v in range(n)]
-    tp = build_type_partition(edge_cut_assign(neigh, n, k), k)
+    pads = _static_pads(plan, {t: n}, k)
+    tp = build_type_partition(edge_cut_assign(neigh, n, k), k,
+                              pad_to=pads[0].get(t, 0))
     tps = {t: tp}
     pi, ni, ki = np.nonzero(valid)
     halo_src, halo_mask, luts, cut, total = _source_partitions(
-        tp, {t: [(ni, nbr[pi, ni, ki])]}, {t: n}, k, tps)
+        tp, {t: [(ni, nbr[pi, ni, ki])]}, {t: n}, k, tps, pads=pads)
     nbr_p = np.zeros((k, p_, tp.n_max, kd), np.int32)
     mask_p = np.zeros((k, p_, tp.n_max, kd), np.float32)
     for j in range(k):
@@ -358,7 +393,7 @@ def _partition_stacked(plan, batch: Dict, k: int) -> Dict:
 
 
 def _target_edge_cut(rels_t: Dict, counts: Dict[str, int], n: int,
-                     k: int) -> TypePartition:
+                     k: int, pad_to: int = 0) -> TypePartition:
     """Edge-cut assignment of the target type from its incoming padded
     relations: each destination row's token set is the (type-offset) union
     of its source reads, so rows sharing sources co-locate."""
@@ -373,7 +408,8 @@ def _target_edge_cut(rels_t: Dict, counts: Dict[str, int], n: int,
                 for key, (r_nbr, r_mask) in sorted(rels_t.items())]
         neigh.append(np.unique(np.concatenate(toks)) if toks
                      else np.zeros(0, np.int64))
-    return build_type_partition(edge_cut_assign(neigh, max(off, 1), k), k)
+    return build_type_partition(edge_cut_assign(neigh, max(off, 1), k), k,
+                                pad_to=pad_to)
 
 
 def _partition_relational(plan, batch: Dict, k: int) -> Dict:
@@ -384,14 +420,16 @@ def _partition_relational(plan, batch: Dict, k: int) -> Dict:
     rels = {key: (np.asarray(v[0]), np.asarray(v[1]))
             for key, v in batch["rels"].items() if key[2] == t}
     counts = {ty: int(c) for ty, c in batch["counts"].items()}
-    tp_t = _target_edge_cut(rels, counts, counts[t], k)
+    pads = _static_pads(plan, counts, k)
+    tp_t = _target_edge_cut(rels, counts, counts[t], k,
+                            pad_to=pads[0].get(t, 0))
     tps: Dict[str, TypePartition] = {t: tp_t}  # self-relations reuse it
     edge_lists: EdgeLists = {t: []}  # target always gets a (maybe empty) halo
     for key, (r_nbr, r_mask) in sorted(rels.items()):
         di, ci = np.nonzero(r_mask > 0)
         edge_lists.setdefault(key[0], []).append((di, r_nbr[di, ci]))
     halo_src, halo_mask, luts, cut, total = _source_partitions(
-        tp_t, edge_lists, counts, k, tps)
+        tp_t, edge_lists, counts, k, tps, pads=pads)
     rels_p: Dict = {}
     for key, (r_nbr, r_mask) in rels.items():
         s = key[0]
@@ -433,11 +471,13 @@ def _partition_relational_ml(plan, batch: Dict, k: int) -> Dict:
     rels = {key: (np.asarray(v[0]), np.asarray(v[1]))
             for key, v in batch["rels"].items()}
     counts = {ty: int(c) for ty, c in batch["counts"].items()}
+    n_pad, h_pad = _static_pads(plan, counts, k)
     # --- target assignment: edge-cut over the relations INTO the target
     # (same construction as the single-layer path) ---
     rels_t = {key: v for key, v in rels.items() if key[2] == t}
     tps: Dict[str, TypePartition] = {
-        t: _target_edge_cut(rels_t, counts, counts[t], k)}
+        t: _target_edge_cut(rels_t, counts, counts[t], k,
+                            pad_to=n_pad.get(t, 0))}
     # --- remaining types: reference majority from settled destinations ---
     remaining = [ty for ty in sorted(counts) if ty not in tps]
     while remaining:
@@ -453,13 +493,15 @@ def _partition_relational_ml(plan, batch: Dict, k: int) -> Dict:
                 np.add.at(votes, (r_nbr[di, ci], tps[d].owner[di]), 1.0)
                 seen = True
             if seen:
-                tps[ty] = build_type_partition(reference_assign(votes, k), k)
+                tps[ty] = build_type_partition(reference_assign(votes, k), k,
+                                               pad_to=n_pad.get(ty, 0))
                 remaining.remove(ty)
                 progress = True
         if not progress:  # types unreachable from the target: round-robin
             for ty in remaining:
                 owner = (np.arange(counts[ty]) % k).astype(np.int32)
-                tps[ty] = build_type_partition(owner, k)
+                tps[ty] = build_type_partition(owner, k,
+                                               pad_to=n_pad.get(ty, 0))
             remaining = []
     # --- halos per source type from ALL relations (per-dst-type owners) ---
     halo_src: Dict[str, np.ndarray] = {}
@@ -478,7 +520,8 @@ def _partition_relational_ml(plan, batch: Dict, k: int) -> Dict:
             ids = [src[downer == j] for downer, src in pairs]
             referenced.append(np.unique(np.concatenate(ids)) if ids
                               else np.zeros(0, np.int64))
-        hs, hm, halos = build_halo(tps[s], referenced, k)
+        hs, hm, halos = build_halo(tps[s], referenced, k,
+                                   pad_to=h_pad.get(s, 0))
         halo_src[s], halo_mask[s] = hs, hm
         luts[s] = local_lut(tps[s], halos, k)
         for downer, src in pairs:
@@ -534,7 +577,9 @@ def _partition_instances(plan, batch: Dict, k: int) -> Dict:
                 toks.append(rows[:, j].astype(np.int64) + offs[ty])
         neigh.append(np.unique(np.concatenate(toks)) if toks
                      else np.zeros(0, np.int64))
-    tp_t = build_type_partition(edge_cut_assign(neigh, max(off, 1), k), k)
+    pads = _static_pads(plan, counts, k)
+    tp_t = build_type_partition(edge_cut_assign(neigh, max(off, 1), k), k,
+                                pad_to=pads[0].get(t, 0))
     tps: Dict[str, TypePartition] = {t: tp_t}
     edge_lists: EdgeLists = {t: []}  # target always gets a (maybe empty) halo
     for (nodes, m), path in zip(insts, plan.metapaths):
@@ -544,7 +589,7 @@ def _partition_instances(plan, batch: Dict, k: int) -> Dict:
                 continue  # position 0 is the (owned) target row itself
             edge_lists.setdefault(ty, []).append((di, nodes[di, ii, j]))
     halo_src, halo_mask, luts, cut, total = _source_partitions(
-        tp_t, edge_lists, counts, k, tps)
+        tp_t, edge_lists, counts, k, tps, pads=pads)
     insts_p = []
     for (nodes, m), path in zip(insts, plan.metapaths):
         _, i, l = nodes.shape

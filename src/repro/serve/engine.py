@@ -88,6 +88,77 @@ class HGNNRequest:
         return self.status in resilience.TERMINAL
 
 
+class _SamplerPrefetcher:
+    """Async host-side sampler refill — one of the stage-graph schedule's
+    three overlap sources (``ScheduleSpec.prefetch``).
+
+    While the device executes step ``t``'s jitted forward, a single worker
+    thread samples the *predicted* step ``t+1`` union batch
+    (``HGNNServeEngine._predict_next`` simulates the engine's own
+    slot/queue advance).  The prediction misses whenever the simulation is
+    wrong — deadline expiry, a degradation shift, a failed step — in which
+    case :meth:`take` discards the speculative batch and the engine falls
+    back to the synchronous sampler.  Always correct regardless of hit
+    rate: ``HGNNSampler.sample`` is a pure function of ``(ids, rung)``
+    (its RNG only seeds the one-time table build), so a discarded
+    speculative call perturbs nothing.
+    """
+
+    def __init__(self, sampler):
+        from concurrent.futures import ThreadPoolExecutor
+
+        self.sampler = sampler
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._future = None
+        self._key = None
+        self.counters: Dict[str, int] = {
+            "issued": 0, "hits": 0, "mispredicts": 0, "cold": 0}
+
+    @staticmethod
+    def _mk_key(ids: np.ndarray, rung_limit: int):
+        return (np.asarray(ids, np.int64).tobytes(), int(rung_limit))
+
+    def submit(self, ids: np.ndarray, rung_limit: int) -> None:
+        """Start sampling a speculative next-step batch (at most one in
+        flight; a still-pending speculation keeps its slot)."""
+        if self._future is not None:
+            return
+        self._key = self._mk_key(ids, rung_limit)
+        self.counters["issued"] += 1
+        self._future = self._pool.submit(
+            self.sampler.sample, np.asarray(ids, np.int64),
+            max_rung=int(rung_limit))
+
+    def take(self, ids: np.ndarray, rung_limit: int):
+        """The prefetched batch iff it answers exactly ``(ids,
+        rung_limit)``; ``None`` (sync fallback) otherwise."""
+        fut, self._future = self._future, None
+        if fut is None:
+            self.counters["cold"] += 1
+            return None
+        try:
+            sb = fut.result()
+        except Exception:  # noqa: BLE001 — sync retry path re-raises it
+            sb = None
+        if sb is None or self._key != self._mk_key(ids, rung_limit):
+            self.counters["mispredicts"] += 1
+            return None
+        self.counters["hits"] += 1
+        return sb
+
+    def drain(self) -> None:
+        """Block on any in-flight speculation and stop the worker — serve
+        teardown must not leak a running sampler thread, whether the loop
+        ended clean, deadline-expired every request, or failed over."""
+        if self._future is not None:
+            try:
+                self._future.result()
+            except Exception:  # noqa: BLE001 — speculation is disposable
+                pass
+            self._future = None
+        self._pool.shutdown(wait=True)
+
+
 class HGNNServeEngine:
     """Slot-based continuous batching for HGNN requests.
 
@@ -101,11 +172,14 @@ class HGNNServeEngine:
     a mixed-size queue never idles a slot while work remains.
 
     ``warmup()`` compiles one entry per ladder rung; afterwards
-    ``stats["compiles_after_warmup"]`` must stay 0 on a single device (the
-    ladder is the whole shape space).  Partitioned plans re-partition the
-    sampled batch each step (host relabeling chooses data-dependent halo
-    shapes, so partitioned serving accepts recompiles — same convention as
-    the partition benchmarks).
+    ``stats["compiles_after_warmup"]`` must stay 0 — partitioned plans
+    included (the ladder is the whole shape space).  Partitioned plans
+    re-partition the sampled batch each step, and the minimal host
+    relabeling chooses data-dependent owned/halo table widths, so the
+    engine serves a ``static_shapes`` copy of the partition spec: every
+    per-type table pads to assignment-independent capacities
+    (``n_max = ceil(n/k)``, ``h_max = n``), making the partitioned shapes a
+    pure function of the rung and killing the per-step re-trace.
 
     Resilience (``repro.serve.resilience`` policies, threaded through the
     slot loop): admission control with structured per-request statuses,
@@ -139,8 +213,14 @@ class HGNNServeEngine:
                     else ResilienceConfig())
         self.injector = injector
         self.n_classes = int(executor.cfg.n_classes)
-        # failover target: partition loss swaps in a survivors-only spec
+        # failover target: partition loss swaps in a survivors-only spec.
+        # Partitioned serving always pins static per-type table shapes —
+        # see the class docstring (compiles_after_warmup == 0).
         self._serve_plan = self.plan
+        if self.plan.partition is not None:
+            self._serve_plan = dataclasses.replace(
+                self.plan, partition=dataclasses.replace(
+                    self.plan.partition, static_shapes=True))
         self._warm_compiles: Optional[int] = None
         self.step_log: List[Dict] = []
         self.last_sb = None
@@ -166,6 +246,11 @@ class HGNNServeEngine:
         self.degrade = DegradationController(
             self.res, len(self.sampler.ladder), self.slot_targets)
         self.retry = RetryPolicy(self.res)
+        # async sampler refill rides the plan's stage-graph schedule — the
+        # host samples step t+1 while the device runs step t's forward
+        sched = self.plan.schedule
+        self.prefetch = (_SamplerPrefetcher(self.sampler)
+                         if sched is not None and sched.prefetch else None)
         self._deadline_expired = 0
         self._failovers = 0
         self._lost_partitions: List[int] = []
@@ -192,6 +277,47 @@ class HGNNServeEngine:
             from repro.dist.partition import partition_batch
             return partition_batch(self._serve_plan, batch)
         return batch
+
+    def _predict_next(self, active, q, chunks):
+        """Predict the NEXT step's ``(union ids, rung limit)`` by simulating
+        this step's completion: each chunk advances its request's cursor,
+        exhausted slots refill from the queue in slot order, and the
+        chunking re-runs under the *current* degradation level.  Purely
+        speculative — deadline expiry, a degradation shift or a failed step
+        falsifies it, and ``_SamplerPrefetcher.take`` then discards the
+        speculative batch (counted in ``mispredicts``).  Returns ``None``
+        when the simulation finds no next step."""
+        done = {id(r): start + len(cids) for r, start, cids in chunks}
+        qi = list(q)
+        qpos = 0
+        cursors = []
+        for r in active:
+            cur = None
+            if r is not None:
+                d = done.get(id(r), r._done)
+                if d < len(r._serve_ids):
+                    cur = (r, d)
+            if cur is None and qpos < len(qi):
+                cur = (qi[qpos], qi[qpos]._done)
+                qpos += 1
+            cursors.append(cur)
+        chunk = self.degrade.chunk()
+        rung_limit = self.degrade.rung_limit()
+        t_budget = self.sampler.ladder[rung_limit][0]
+        parts = []
+        n_union = 0
+        for cur in cursors:
+            if cur is None:
+                continue
+            if n_union >= t_budget:
+                break
+            r, d = cur
+            take = min(chunk, t_budget - n_union, len(r._serve_ids) - d)
+            parts.append(np.asarray(r._serve_ids[d: d + take], np.int64))
+            n_union += take
+        if not parts:
+            return None
+        return np.concatenate(parts), rung_limit
 
     def _maybe_failover(self, step: int) -> None:
         """Injected partition loss -> re-assign the lost partition's
@@ -287,12 +413,24 @@ class HGNNServeEngine:
             ids = np.concatenate([c[2] for c in chunks])
             t0 = time.perf_counter()
             inj = self.injector
+            # prefetch hit: the speculative batch stands in for the sampler
+            # call but still runs under the SAME retry policy and fault
+            # hook, so injected sampler faults (and their counters) fire
+            # identically whether the batch was prefetched or sampled sync
+            sb_pre = (self.prefetch.take(ids, rung_limit)
+                      if self.prefetch is not None else None)
+            sample_call = ((lambda: sb_pre) if sb_pre is not None else
+                           (lambda: self.sampler.sample(
+                               ids, max_rung=rung_limit)))
             try:
                 sb = retry.run(
-                    "sampler",
-                    lambda: self.sampler.sample(ids, max_rung=rung_limit),
+                    "sampler", sample_call,
                     hook=(lambda a: inj.check("sampler", step, a))
                     if inj else None)
+                if self.prefetch is not None:
+                    nxt = self._predict_next(active, q, chunks)
+                    if nxt is not None:
+                        self.prefetch.submit(*nxt)
                 out = retry.run(
                     "forward",
                     lambda: np.asarray(
@@ -356,6 +494,8 @@ class HGNNServeEngine:
             })
             self.last_sb = sb
             step += 1
+        if self.prefetch is not None:
+            self.prefetch.drain()
         for r in requests:
             self._status_counts[r.status] = (
                 self._status_counts.get(r.status, 0) + 1)
@@ -407,6 +547,9 @@ class HGNNServeEngine:
                 "injected": inj_counts,
             },
         }
+        if self.prefetch is not None:
+            out["prefetch"] = {k: int(v)
+                               for k, v in self.prefetch.counters.items()}
         if self.caches is not None:
             hits = sum(c.hits for c in self.caches.values())
             misses = sum(c.misses for c in self.caches.values())

@@ -1,0 +1,338 @@
+"""Async stage-graph pipelining (ScheduleSpec / forward_overlapped).
+
+The tentpole invariant: every overlapped execution mode is BIT-EXACT the
+serial schedule.  The split points are pure row selections (owned-rows
+gather + halo where-merge) and elementwise rearrangements (stack-after-act),
+never float reductions, so `np.testing.assert_array_equal` — not allclose —
+is the bar across the whole matrix: HAN/RGCN/MAGNN, 1 and 2 layers,
+partitioned K=4, and sampled serving with the prefetch thread.
+
+Also pinned here: depth=1 degrades to fully-blocking serial dispatch;
+single-metapath plans skip the metapath fan-out (nothing to overlap); the
+plan-derived DAG and its concurrency counters; static partition shapes
+(the serving re-trace fix) are bit-exact vs the dynamic minimal shapes;
+and the sampler prefetcher drains cleanly through deadline expiry and
+partition failover.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HGNNConfig
+from repro.core.models import get_model
+from repro.data.synthetic import DATASET_METAPATHS, DATASET_TARGET
+from repro.dist.partition import partition_batch
+from repro.serve.engine import HGNNRequest, HGNNServeEngine
+from repro.serve.resilience import OK, PARTIAL, ResilienceConfig
+from repro.serve.sampler import HGNNSampler
+
+
+def _tiny_tables():
+    DATASET_METAPATHS["tiny"] = [["M", "D", "M"], ["M", "A", "M"]]
+    DATASET_TARGET["tiny"] = "M"
+    # single-metapath registration for the no-fan-out edge case
+    DATASET_METAPATHS["tiny1"] = [["M", "D", "M"]]
+    DATASET_TARGET["tiny1"] = "M"
+
+
+def _cfg(model, dataset="tiny", **kw):
+    _tiny_tables()
+    kw = {"max_degree": 48, "max_instances": 4, "fused": True, **kw}
+    return HGNNConfig(model=model, dataset=dataset, hidden=16, n_heads=4,
+                      n_classes=3, **kw)
+
+
+def _forward_pair(tiny_hg, model, kw, overlap):
+    """(model, serial forward, overlapped forward) at the given depth."""
+    cfg = _cfg(model, overlap=overlap, **kw)
+    m = get_model(cfg)
+    batch = m.prepare(tiny_hg)
+    params = m.init(jax.random.key(0), batch)
+    ref = np.asarray(jax.jit(m.forward)(params, batch))
+    out = np.asarray(m.forward_overlapped(params, batch))
+    return m, ref, out
+
+
+# ---------------------------------------------------------------------------
+# the parity matrix: overlapped == serial, bitwise
+# ---------------------------------------------------------------------------
+
+MATRIX = [
+    ("han", {}),                               # stacked: single NA launch
+    ("han", {"degree_buckets": 3}),            # bucketed: metapath fan-out
+    ("han", {"fused": False}),                 # csr: metapath fan-out
+    ("rgcn", {}),
+    ("magnn", {}),                             # instances: metapath fan-out
+    ("han", {"layers": 2}),
+    ("rgcn", {"layers": 2}),
+    ("magnn", {"layers": 2}),
+    ("han", {"partitions": 4}),                # halo/compute split
+    ("rgcn", {"partitions": 4}),
+    ("magnn", {"partitions": 4}),
+    ("han", {"partitions": 4, "layers": 2}),
+    ("rgcn", {"partitions": 4, "layers": 2}),
+]
+
+
+@pytest.mark.parametrize("model,kw", MATRIX,
+                         ids=[f"{m}-{'-'.join(f'{k}{v}' for k, v in kw.items()) or 'base'}"
+                              for m, kw in MATRIX])
+def test_overlapped_forward_is_bitexact(tiny_hg, model, kw):
+    m, ref, out = _forward_pair(tiny_hg, model, kw, overlap=2)
+    np.testing.assert_array_equal(ref, out)
+    # the dispatcher walked exactly the declared DAG
+    d = m.executor.last_dispatch
+    rec = m.executor.overlap_record()
+    assert d["depth"] == 2
+    assert len(d["dispatched"]) == rec["stages"]
+    assert list(m.executor.schedule_edges()) == d["dispatched"]
+
+
+def test_depth_one_degrades_to_serial(tiny_hg):
+    """overlap=1 is the serial-degenerate baseline: every admit blocks, so
+    at most one stage result is ever in flight — and the math is still the
+    same stage functions, so outputs stay bitwise equal."""
+    for model, kw in [("han", {"degree_buckets": 3}),
+                      ("rgcn", {"partitions": 4, "layers": 2})]:
+        m, ref, out = _forward_pair(tiny_hg, model, kw, overlap=1)
+        np.testing.assert_array_equal(ref, out)
+        assert m.executor.last_dispatch["max_inflight"] == 1
+
+
+def test_repeated_overlapped_calls_reuse_stage_jits(tiny_hg):
+    m, _, out1 = _forward_pair(tiny_hg, "han", {"partitions": 4}, overlap=2)
+    n_jits = len(m.executor._ov_jit)
+    batch = m.prepare(tiny_hg)
+    params = m.init(jax.random.key(0), batch)
+    out2 = np.asarray(m.forward_overlapped(params, batch))
+    np.testing.assert_array_equal(out1, out2)
+    assert len(m.executor._ov_jit) == n_jits  # no new traces
+
+
+# ---------------------------------------------------------------------------
+# the plan-derived DAG
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_edges_partitioned_split(tiny_hg):
+    m = get_model(_cfg("han", partitions=4, layers=2, overlap=2))
+    edges = m.executor.schedule_edges()
+    assert edges["L1.gather_halo"] == ("L1.FP",)
+    assert edges["L1.NA.own"] == ("L1.FP",)
+    assert edges["L1.NA"] == ("L1.NA.own", "L1.gather_halo")
+    assert edges["L2.FP"] == ("L1.SA",)
+    rec = m.executor.overlap_record()
+    assert rec["concurrent_pairs"] == 2
+    assert "L1.gather_halo|L1.NA.own" in rec["pairs"]
+    assert "L2.gather_halo|L2.NA.own" in rec["pairs"]
+
+
+def test_schedule_edges_metapath_split(tiny_hg):
+    m = get_model(_cfg("han", degree_buckets=3, overlap=2))
+    edges = m.executor.schedule_edges()
+    assert edges["NA.p0"] == ("FP",)
+    assert edges["NA.p1"] == ("FP",)
+    assert edges["SA"] == ("NA.p0", "NA.p1")
+    assert m.executor.overlap_record()["concurrent_pairs"] == 1
+
+
+def test_single_metapath_plan_skips_metapath_concurrency(tiny_hg):
+    """One metapath has nothing to overlap: the schedule must fall back to
+    the serial chain (no NA.p nodes, zero concurrent pairs) — and still run
+    bit-exact through the overlapped dispatcher."""
+    m, ref, out = _forward_pair(tiny_hg, "han",
+                                {"dataset": "tiny1", "degree_buckets": 3},
+                                overlap=2)
+    np.testing.assert_array_equal(ref, out)
+    edges = m.executor.schedule_edges()
+    assert "NA" in edges and not any(n.startswith("NA.p") for n in edges)
+    assert m.executor.overlap_record()["concurrent_pairs"] == 0
+
+
+def test_stacked_layout_keeps_single_na_launch(tiny_hg):
+    """HAN's stacked layout is ONE batched launch by design — the schedule
+    must not fan it out into per-metapath stages."""
+    m = get_model(_cfg("han", overlap=2))  # fused=True -> stacked
+    edges = m.executor.schedule_edges()
+    assert "NA" in edges and not any(n.startswith("NA.p") for n in edges)
+
+
+def test_stage_records_carry_overlap_record(tiny_hg):
+    cfg = _cfg("han", degree_buckets=3, overlap=2)
+    m = get_model(cfg)
+    batch = m.prepare(tiny_hg)
+    params = m.init(jax.random.key(0), batch)
+    recs = m.executor.stage_records(params, batch)
+    assert recs["overlap"]["concurrent_pairs"] == 1
+    # serial default plans grow no overlap section
+    m0 = get_model(_cfg("han", degree_buckets=3))
+    b0 = m0.prepare(tiny_hg)
+    p0 = m0.init(jax.random.key(0), b0)
+    assert "overlap" not in m0.executor.stage_records(p0, b0)
+
+
+# ---------------------------------------------------------------------------
+# the dispatch window + the accounting
+# ---------------------------------------------------------------------------
+
+
+def test_inflight_window_depth_semantics():
+    from repro.kernels.streaming import InflightWindow
+
+    win = InflightWindow(0)  # clamps to the serial baseline
+    assert win.depth == 1
+    win = InflightWindow(2)
+    for i in range(5):
+        win.admit(f"s{i}", jnp.ones(4) * i)
+    # admit-then-block: the window holds depth results plus the one being
+    # admitted before it blocks on the oldest
+    assert win.max_inflight == 3
+    win.drain()
+    assert win._live == []
+    assert win.admitted == [f"s{i}" for i in range(5)]
+
+
+def test_overlap_accounting_critical_path():
+    from repro.core.characterize import overlap_accounting
+
+    edges = {"FP": (), "gather_halo": ("FP",), "NA.own": ("FP",),
+             "NA": ("NA.own", "gather_halo"), "SA": ("NA",), "head": ("SA",)}
+    walls = {"FP": 10.0, "gather_halo": 5.0, "NA.own": 20.0, "NA": 30.0,
+             "SA": 5.0, "head": 1.0}
+    acct = overlap_accounting(edges, walls)
+    assert acct["serial_sum_us"] == 71.0
+    # the 5us exchange hides entirely behind the 20us owned-rows NA
+    assert acct["critical_path_us"] == 66.0
+    assert acct["overlap_saved_us"] == 5.0
+    assert acct["exposure_us"]["gather_halo"] == 0.0
+    # zeroing NA.own leaves the exchange path (10+5) feeding NA
+    assert acct["exposure_us"]["NA.own"] == 15.0
+    assert acct["exposure_us"]["FP"] == 10.0
+
+
+# ---------------------------------------------------------------------------
+# static partition shapes (the serving re-trace fix)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model,kw", [
+    ("han", {}), ("rgcn", {}), ("magnn", {}), ("rgcn", {"layers": 2}),
+    ("han", {"layers": 2}),
+], ids=["han", "rgcn", "magnn", "rgcn-L2", "han-L2"])
+def test_static_partition_shapes_are_bitexact(tiny_hg, model, kw):
+    """static_shapes pads every per-type table to assignment-independent
+    capacities (n_max=ceil(n/k), h_max=n).  Pad rows are masked dead weight:
+    the forward over the padded batch must be BIT-EXACT the dynamic one."""
+    cfg = _cfg(model, partitions=4, **kw)
+    m = get_model(cfg)
+    b_dyn = m.prepare(tiny_hg)
+    params = m.init(jax.random.key(0), b_dyn)
+    out_dyn = np.asarray(jax.jit(m.forward)(params, b_dyn))
+    plan = m.plan()
+    plan_s = dataclasses.replace(
+        plan, partition=dataclasses.replace(plan.partition,
+                                            static_shapes=True))
+    b_raw = get_model(_cfg(model, **kw)).prepare(tiny_hg)
+    b_stat = partition_batch(plan_s, b_raw)
+    out_stat = np.asarray(jax.jit(m.forward)(params, b_stat))
+    np.testing.assert_array_equal(out_dyn, out_stat)
+    # the capacities are assignment-independent: ceil(40/4) target rows
+    # per partition, halo capped at the type count
+    t = plan.target
+    assert b_stat["part"]["own"][t].shape == (4, 10)
+    assert b_stat["part"]["halo_src"][t].shape == (4, 40)
+
+
+def test_partitioned_sampled_serving_zero_recompiles(tiny_hg):
+    """The satellite regression: partitioned sampled serving used to
+    re-trace every step (data-dependent halo widths).  With the engine's
+    static_shapes serve plan the warmed ladder covers every step."""
+    for model in ("han", "rgcn", "magnn"):
+        cfg = _cfg(model, fanout=8, partitions=4)
+        m = get_model(cfg)
+        sampler = HGNNSampler(m.plan(), cfg, tiny_hg)
+        batch = m.prepare(tiny_hg)
+        params = m.init(jax.random.key(0), batch)
+        eng = HGNNServeEngine(m.executor, params, sampler, slots=4,
+                              slot_targets=2)
+        eng.warmup()
+        eng.serve(_mixed_requests(10))
+        st = eng.stats()
+        assert st["steps"] > 1
+        assert st["compiles_after_warmup"] == 0, model
+
+
+# ---------------------------------------------------------------------------
+# sampled serving: async prefetch parity + drain discipline
+# ---------------------------------------------------------------------------
+
+
+def _mixed_requests(n, n_nodes=40, seed=3):
+    rng = np.random.default_rng(seed)
+    return [HGNNRequest(targets=rng.integers(
+        0, n_nodes, size=int(rng.integers(1, 9)))) for _ in range(n)]
+
+
+def _serve(tiny_hg, model, overlap, partitions=0, res=None, injector=None,
+           n_req=10):
+    cfg = _cfg(model, fanout=8, partitions=partitions, overlap=overlap)
+    m = get_model(cfg)
+    sampler = HGNNSampler(m.plan(), cfg, tiny_hg)
+    batch = m.prepare(tiny_hg)
+    params = m.init(jax.random.key(0), batch)
+    eng = HGNNServeEngine(m.executor, params, sampler, slots=4,
+                          slot_targets=2, resilience_cfg=res,
+                          injector=injector)
+    eng.warmup()
+    reqs = eng.serve(_mixed_requests(n_req))
+    return reqs, eng
+
+
+@pytest.mark.parametrize("model,partitions", [
+    ("han", 0), ("rgcn", 0), ("magnn", 0),
+    ("han", 4), ("rgcn", 4), ("magnn", 4),
+], ids=["han", "rgcn", "magnn", "han-k4", "rgcn-k4", "magnn-k4"])
+def test_serving_prefetch_is_bitexact(tiny_hg, model, partitions):
+    """The prefetch thread must change walls only: statuses and logits are
+    bitwise identical to the synchronous serve, the jit cache stays warm,
+    and most steps hit the speculation (the slot loop is predictable)."""
+    r_sync, e_sync = _serve(tiny_hg, model, overlap=0, partitions=partitions)
+    r_pf, e_pf = _serve(tiny_hg, model, overlap=2, partitions=partitions)
+    assert e_sync.prefetch is None and e_pf.prefetch is not None
+    for a, b in zip(r_sync, r_pf):
+        assert a.status == b.status
+        np.testing.assert_array_equal(a.logits, b.logits)
+    st = e_pf.stats()
+    assert st["compiles_after_warmup"] == 0
+    pf = st["prefetch"]
+    assert pf["hits"] > 0 and pf["cold"] == 1
+    assert pf["hits"] + pf["mispredicts"] + pf["cold"] == st["steps"]
+
+
+def test_prefetch_drains_on_deadline_expiry(tiny_hg):
+    """Every request expires before a step runs: the loop ends without ever
+    consuming a speculation, and the worker must still shut down clean."""
+    reqs, eng = _serve(tiny_hg, "han", overlap=2,
+                       res=ResilienceConfig(deadline_ms=0.0), n_req=5)
+    assert all(r.status == PARTIAL for r in reqs)
+    assert eng.prefetch._future is None
+    assert eng.prefetch._pool._shutdown
+
+
+def test_prefetch_drains_through_partition_failover(tiny_hg):
+    """Failover mid-serve: the sampler is partition-agnostic, so in-flight
+    speculation stays valid across the spec swap; requests still complete
+    OK and the worker shuts down clean."""
+    from repro.serve.faults import Fault, FaultInjector
+
+    inj = FaultInjector([Fault(step=1, kind="partition", partition=2)])
+    reqs, eng = _serve(tiny_hg, "han", overlap=2, partitions=4, injector=inj)
+    assert all(r.status == OK for r in reqs)
+    rs = eng.stats()["resilience"]
+    assert rs["partition_failovers"] == 1 and rs["lost_partitions"] == [2]
+    assert eng.stats()["prefetch"]["issued"] > 0
+    assert eng.prefetch._future is None
+    assert eng.prefetch._pool._shutdown
